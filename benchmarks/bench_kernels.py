@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks: wall time of the XLA reference paths on CPU (the
+Pallas kernels themselves are TPU-target; interpret mode timing is not
+meaningful, so we report the oracle path + kernel call integrity)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.kernels import ops, ref
+
+
+def _time(fn, n=5) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(out: list[str]) -> None:
+    print("# kernel microbenches (CPU: ref path timed; Pallas = interpret)")
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+
+    B, H, KV, L, D = 1, 8, 2, 1024, 128
+    q = jax.random.normal(ks[0], (B, H, L, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, L, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, L, D), jnp.float32)
+    kr = jnp.repeat(k, H // KV, axis=1).reshape(B * H, L, D)
+    vr = jnp.repeat(v, H // KV, axis=1).reshape(B * H, L, D)
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c, causal=True))
+    us = _time(lambda: jax.block_until_ready(f(q.reshape(B * H, L, D), kr, vr)))
+    flops = 4 * B * H * L * L * D * 0.5
+    print(f"  attention ref  L={L}: {us/1e3:8.1f}ms  "
+          f"({flops/us*1e6/1e12:.3f} TFLOP/s cpu)")
+    out.append(row("kernels/attention_ref_1k", us, f"{flops/us*1e6/1e12:.3f}TF/s"))
+
+    Bm, Lm, Hm, P, N = 1, 1024, 4, 64, 128
+    xh = jax.random.normal(ks[3], (Bm, Lm, Hm, P)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (Bm, Lm, Hm)))
+    A = -jnp.exp(jax.random.normal(key, (Hm,)) * 0.3)
+    Bs = jax.random.normal(ks[0], (Bm, Lm, N)) * 0.3
+    Cs = jax.random.normal(ks[1], (Bm, Lm, N)) * 0.3
+    from repro.models.mamba import ssd_chunked
+    g = jax.jit(lambda *a: ssd_chunked(*a, chunk=256))
+    us = _time(lambda: jax.block_until_ready(g(xh, dt, A, Bs, Cs)))
+    print(f"  ssd chunked    L={Lm}: {us/1e3:8.1f}ms")
+    out.append(row("kernels/ssd_chunked_1k", us, "ms"))
+
+    x = jax.random.normal(ks[2], (4096, 256))
+    w = jax.random.normal(ks[3], (256, 64)) * 0.1
+    r = jax.jit(lambda a, b: ref.moe_router_ref(a, b, 8))
+    us = _time(lambda: jax.block_until_ready(r(x, w)))
+    print(f"  moe router     T=4096: {us/1e3:8.2f}ms")
+    out.append(row("kernels/moe_router_4k", us, "ms"))

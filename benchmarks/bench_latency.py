@@ -1,0 +1,67 @@
+"""Paper Sec 5.7 operation costs: decision latency vs queue size, RL
+inference latency (fused Pallas policy-MLP vs XLA), MILP solve time."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import (ClusterState, Job, choose_allocation, generate_trace,
+                        make_cluster)
+from repro.core.agent import PPOAgent, PPOConfig, actor_logits
+from repro.core.features import build_state
+from repro.kernels import ops
+
+
+def _time(fn, n=20) -> float:
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run(out: list[str]) -> None:
+    print("# Sec 5.7: decision latency scaling (state build + RL forward)")
+    agent = PPOAgent(PPOConfig())
+    cluster = ClusterState(make_cluster("helios"))
+    for qsize in (128, 256, 512, 1024):
+        jobs = generate_trace("helios", qsize, seed=1)
+        t0 = time.perf_counter()
+        ov, cv, mask = build_state(jobs, cluster, now=1e5)
+        state_us = (time.perf_counter() - t0) * 1e6
+        lg = actor_logits(agent.params, jnp.asarray(ov), jnp.asarray(mask))
+        jax.block_until_ready(lg)
+        fwd_us = _time(lambda: jax.block_until_ready(
+            actor_logits(agent.params, jnp.asarray(ov), jnp.asarray(mask))))
+        total_ms = (state_us + fwd_us) / 1e3
+        print(f"  queue={qsize:5d}: state={state_us/1e3:7.1f}ms "
+              f"rl_fwd={fwd_us/1e3:6.2f}ms total={total_ms:7.1f}ms")
+        out.append(row(f"latency/queue_{qsize}", state_us + fwd_us,
+                       f"{total_ms:.1f}ms"))
+
+    print("# RL inference: XLA vs fused Pallas policy-MLP (interpret on CPU)")
+    ov, cv, mask = build_state(generate_trace("helios", 256, seed=2),
+                               cluster, 1e5)
+    x, m = jnp.asarray(ov), jnp.asarray(mask)
+    xla_us = _time(lambda: jax.block_until_ready(
+        actor_logits(agent.params, x, m)))
+    pal_us = _time(lambda: jax.block_until_ready(
+        ops.policy_mlp(x, agent.params["actor"], m)))
+    print(f"  xla={xla_us:.0f}us  pallas(interpret)={pal_us:.0f}us "
+          f"(on-TPU target ~700us incl. state build; paper Sec 5.7)")
+    out.append(row("latency/policy_mlp_xla", xla_us, "us"))
+    out.append(row("latency/policy_mlp_pallas_interpret", pal_us, "us"))
+
+    print("# MILP allocation solve time")
+    j = Job(job_id=0, user=0, submit_time=0, runtime=100, est_runtime=100,
+            num_gpus=4)
+    look = [Job(job_id=i, user=0, submit_time=0, runtime=100,
+                est_runtime=100, num_gpus=2) for i in range(1, 9)]
+    ways = cluster.candidate_ways(j)
+    milp_us = _time(lambda: choose_allocation(cluster, j, ways, look), n=10)
+    print(f"  milp solve (top-K=8 lookahead): {milp_us/1e3:.1f}ms")
+    out.append(row("latency/milp_solve", milp_us, f"{milp_us/1e3:.1f}ms"))

@@ -1,0 +1,31 @@
+"""Paper Table 7: cross-policy transfer on Helios — train the agent against
+one base policy, evaluate its ranking under every other base policy."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BATCH_SIZE, EVAL_BATCHES, get_trainer, row
+from repro.core import improvement
+from repro.core.trainer import RLTuneTrainer, TrainerConfig
+
+POLICIES = ("fcfs", "sjf", "wfp3")
+
+
+def run(out: list[str]) -> None:
+    print("# Table 7: wait-time improvement, cross-policy transfer (helios)")
+    agents = {p: get_trainer("helios", p, "wait").agent.state_dict()
+              for p in POLICIES}
+    print(f"{'train\\test':12s} " + "".join(f"{p:>9s}" for p in POLICIES))
+    for src in POLICIES:
+        cells = []
+        for dst in POLICIES:
+            cfg = TrainerConfig(trace="helios", base_policy=dst,
+                                metric="wait", batch_size=BATCH_SIZE,
+                                batches_per_epoch=1, epochs=1)
+            tr = RLTuneTrainer(cfg)
+            tr.agent.load_state_dict(agents[src])
+            ev = tr.evaluate(num_batches=EVAL_BATCHES, batch_size=BATCH_SIZE)
+            imp = improvement(ev["base"]["wait"], ev["rl"]["wait"])
+            cells.append(f"{imp:+8.1f}%")
+            out.append(row(f"table7/{src}->{dst}", 0.0, f"{imp:+.1f}%"))
+        print(f"{src:12s} " + "".join(cells))

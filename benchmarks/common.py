@@ -1,0 +1,66 @@
+"""Shared benchmark helpers: agent training/caching, evaluation, CSV rows."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import improvement
+from repro.core.trainer import RLTuneTrainer, TrainerConfig
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+AGENTS = os.path.join(ART, "agents")
+os.makedirs(AGENTS, exist_ok=True)
+
+# benchmark scale knobs (CPU container budget); REPRO_BENCH_SCALE=full for
+# paper-scale runs (100 batches/epoch, batch 256)
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
+TRAIN_BATCHES = int(os.environ.get("REPRO_BENCH_TRAIN_BATCHES",
+                                   {"quick": 60, "full": 100}[SCALE]))
+BATCH_SIZE = {"quick": 128, "full": 256}[SCALE]
+EVAL_BATCHES = int(os.environ.get("REPRO_BENCH_EVAL_BATCHES",
+                                  {"quick": 4, "full": 10}[SCALE]))
+
+
+def agent_path(trace: str, policy: str, metric: str, variant: str) -> str:
+    return os.path.join(AGENTS, f"{trace}__{policy}__{metric}__{variant}")
+
+
+def get_trainer(trace: str, policy: str, metric: str = "wait",
+                variant: str = "pro", train: bool = True,
+                seed: int = 0) -> RLTuneTrainer:
+    """Train (or load cached) RLTune agent for (trace, base policy, metric)."""
+    from repro.ckpt.checkpoint import latest_step, load_checkpoint, \
+        save_checkpoint
+    cfg = TrainerConfig(trace=trace, base_policy=policy, metric=metric,
+                        variant=variant, batch_size=BATCH_SIZE,
+                        batches_per_epoch=TRAIN_BATCHES, epochs=1, seed=seed)
+    tr = RLTuneTrainer(cfg)
+    path = agent_path(trace, policy, metric, variant)
+    if train:
+        if latest_step(path) is not None:
+            state, _ = load_checkpoint(path, tr.agent.state_dict())
+            tr.agent.load_state_dict(state)
+        else:
+            t0 = time.time()
+            tr.train()
+            save_checkpoint(path, 1, tr.agent.state_dict())
+            print(f"#   trained {trace}/{policy}/{metric}/{variant} "
+                  f"in {time.time() - t0:.0f}s")
+    return tr
+
+
+def eval_pair(tr: RLTuneTrainer, num_batches: int = 0) -> dict:
+    ev = tr.evaluate(num_batches=num_batches or EVAL_BATCHES,
+                     batch_size=BATCH_SIZE)
+    out = {}
+    for m in ("wait", "jct", "bsld", "util"):
+        out[m] = (ev["base"][m], ev["rl"][m],
+                  improvement(ev["base"][m], ev["rl"][m],
+                              lower_is_better=(m != "util")))
+    return out
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

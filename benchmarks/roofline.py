@@ -1,0 +1,46 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import ART, row
+
+DRY = os.path.join(ART, "dryrun")
+
+
+def load_cells(mesh_tag: str) -> list[dict]:
+    d = os.path.join(DRY, mesh_tag)
+    if not os.path.isdir(d):
+        return []
+    cells = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                cells.append(json.load(fh))
+    return cells
+
+
+def run(out: list[str]) -> None:
+    for mesh_tag in ("singlepod", "multipod"):
+        cells = load_cells(mesh_tag)
+        if not cells:
+            print(f"# roofline: no {mesh_tag} artifacts "
+                  f"(run python -m repro.launch.dryrun first)")
+            continue
+        print(f"\n# Roofline ({mesh_tag}): per-chip seconds per step")
+        print(f"{'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+              f"{'coll_s':>10s} {'dominant':>11s} {'roof%':>6s} "
+              f"{'useful':>7s} {'mem/dev':>8s}")
+        for c in cells:
+            dom = c["dominant"].replace("_s", "")
+            print(f"{c['arch']:22s} {c['shape']:12s} "
+                  f"{c['compute_s']:9.3f} {c['memory_s']:9.3f} "
+                  f"{c['collective_s']:10.3f} {dom:>11s} "
+                  f"{100*c['roofline_fraction']:5.1f}% "
+                  f"{c['useful_flops_frac']:7.2f} "
+                  f"{(c['memory']['arg_bytes']+c['memory']['temp_bytes'])/2**30:7.1f}G")
+            out.append(row(
+                f"roofline/{mesh_tag}/{c['arch']}/{c['shape']}",
+                c["compute_s"] * 1e6,
+                f"dom={dom};roof={100*c['roofline_fraction']:.1f}%"))

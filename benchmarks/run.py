@@ -1,0 +1,44 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints human-readable tables plus ``name,us_per_call,derived`` CSV rows at
+the end.  Module selection: ``python -m benchmarks.run [module ...]`` with
+modules in {latency, kernels, roofline, naive, qssf, util, transfer,
+policies}.  REPRO_BENCH_SCALE=full for paper-scale runs.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = ("latency", "kernels", "roofline", "variability", "naive", "qssf",
+           "util", "transfer", "policies")
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(MODULES)
+    rows: list[str] = []
+    t0 = time.time()
+    special = {"roofline": "benchmarks.roofline",
+               "naive": "benchmarks.bench_naive_vs_pro"}
+    for name in want:
+        modname = special.get(name, f"benchmarks.bench_{name}")
+        mod = __import__(modname, fromlist=["run"])
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        t1 = time.time()
+        try:
+            mod.run(rows)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[bench {name} FAILED] {e!r}")
+            rows.append(f"{name}/FAILED,0,{e!r}")
+        print(f"-- {name} done in {time.time() - t1:.0f}s")
+
+    print(f"\n{'=' * 72}\n== CSV (name,us_per_call,derived)\n{'=' * 72}")
+    for r in rows:
+        print(r)
+    print(f"# total bench time {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

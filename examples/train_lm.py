@@ -1,0 +1,57 @@
+"""End-to-end LM training through the full stack: model zoo config ->
+sharded train_step -> AdamW -> deterministic data pipeline -> async
+checkpoints -> restart.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~15M params, quick
+    PYTHONPATH=src python examples/train_lm.py --full          # ~100M, few hundred steps
+
+Loss on the synthetic Markov stream drops well below ln(V) uniform entropy,
+demonstrating real learning through the whole substrate.
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs.base import ModelConfig, register
+from repro.launch.train import train_loop
+
+QUICK = ModelConfig(
+    name="example-15m", family="dense",
+    num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
+    d_ff=1024, vocab_size=2048, head_dim=32, tie_embeddings=True,
+)
+FULL = ModelConfig(
+    name="example-100m", family="dense",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+    d_ff=3072, vocab_size=8192, head_dim=64, tie_embeddings=True,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 300 steps (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = FULL if args.full else QUICK
+    register(cfg, cfg)  # make it addressable through the config registry
+    steps = args.steps or (300 if args.full else 60)
+
+    from repro.models import build_model
+    n = build_model(cfg).param_count()
+    print(f"[train_lm] {cfg.name}: {n/1e6:.1f}M params, {steps} steps")
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        out = train_loop(cfg.name, smoke=False, steps=steps, batch=8,
+                         seq=256, microbatches=2, ckpt_dir=ckpt,
+                         ckpt_interval=max(steps // 3, 10), log_every=10,
+                         lr=3e-3)
+    first, last = out["losses"][0], out["final_loss"]
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f} "
+          f"(uniform entropy {__import__('math').log(cfg.vocab_size):.2f})")
+    assert last < first, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

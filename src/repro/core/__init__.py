@@ -1,0 +1,24 @@
+"""RLTune core: hybrid RL + MILP dynamic scheduling (the paper's contribution)."""
+from repro.core.agent import PPOAgent, PPOConfig
+from repro.core.cluster import ClusterState
+from repro.core.env import InspectorPrioritizer, RLPrioritizer
+from repro.core.faults import FaultInjector, FaultModel
+from repro.core.metrics import BatchResult, reward_from_scores
+from repro.core.milp import MILPResult, choose_allocation
+from repro.core.policies import BASE_POLICIES, make_policy
+from repro.core.simulator import PolicyPrioritizer, Simulator
+from repro.core.trace import (ALIBABA, HELIOS, PHILLY, PROFILES, batch_iter,
+                              generate_trace, load_trace_csv, make_cluster,
+                              train_eval_split)
+from repro.core.trainer import RLTuneTrainer, TrainerConfig, improvement
+from repro.core.types import ClusterSpec, Job, JobState, NodeSpec
+
+__all__ = [
+    "PPOAgent", "PPOConfig", "ClusterState", "InspectorPrioritizer",
+    "RLPrioritizer", "FaultInjector", "FaultModel", "BatchResult",
+    "reward_from_scores", "MILPResult", "choose_allocation", "BASE_POLICIES",
+    "make_policy", "PolicyPrioritizer", "Simulator", "ALIBABA", "HELIOS",
+    "PHILLY", "PROFILES", "batch_iter", "generate_trace", "load_trace_csv",
+    "make_cluster", "train_eval_split", "RLTuneTrainer", "TrainerConfig",
+    "improvement", "ClusterSpec", "Job", "JobState", "NodeSpec",
+]

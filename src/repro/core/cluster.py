@@ -1,0 +1,145 @@
+"""Runtime cluster state: allocation tracking + placement enumeration.
+
+The cluster tracks free GPUs/CPUs/memory per node, supports gang allocation
+across nodes, and enumerates candidate placements ("ways") for a job:
+
+- way1 "spread": prefer empty / least-loaded nodes (isolation, low contention)
+- way2 "pack":   prefer most-loaded nodes that still fit (utilization)
+
+The MILP module (Algorithm 1 of the paper) chooses between them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import ClusterSpec, Job
+
+Placement = dict[int, int]  # node_id -> gpus taken
+
+
+class ClusterState:
+    """Mutable multi-resource state of a heterogeneous cluster."""
+
+    def __init__(self, spec: ClusterSpec):
+        self.spec = spec
+        n = len(spec.nodes)
+        self.free_gpus = np.array([nd.num_gpus for nd in spec.nodes], dtype=np.int64)
+        self.free_cpus = np.array([nd.num_cpus for nd in spec.nodes], dtype=np.int64)
+        self.free_mem = np.array([nd.mem_gb for nd in spec.nodes], dtype=np.float64)
+        self.gpu_types = [nd.gpu_type for nd in spec.nodes]
+        self.speeds = np.array([nd.speed for nd in spec.nodes], dtype=np.float64)
+        self.total_gpus = np.array([nd.num_gpus for nd in spec.nodes], dtype=np.int64)
+        self.node_down = np.zeros(n, dtype=bool)   # fault injection
+
+    # ------------------------------------------------------------------ queries --
+    def nodes_for(self, job: Job) -> np.ndarray:
+        """Boolean mask of nodes whose SKU satisfies the job's request and are up."""
+        ok = np.array([job.gpu_type in ("any", t) for t in self.gpu_types])
+        return ok & ~self.node_down
+
+    def free_gpus_of_type(self, gpu_type: str) -> int:
+        if gpu_type == "any":
+            return int(self.free_gpus[~self.node_down].sum())
+        idx = [i for i, t in enumerate(self.gpu_types)
+               if t == gpu_type and not self.node_down[i]]
+        return int(self.free_gpus[idx].sum())
+
+    def total_gpus_of_type(self, gpu_type: str) -> int:
+        if gpu_type == "any":
+            return int(self.total_gpus.sum())
+        return int(sum(g for g, t in zip(self.total_gpus, self.gpu_types) if t == gpu_type))
+
+    def _fits_node(self, job: Job, i: int, gpus: int) -> bool:
+        """Would `gpus` GPUs of `job` fit on node i respecting CPU/mem coupling?"""
+        if gpus <= 0 or gpus > self.free_gpus[i]:
+            return False
+        frac = gpus / max(job.num_gpus, 1)
+        return (self.free_cpus[i] >= round(job.req_cpus * frac)
+                and self.free_mem[i] >= job.req_mem_gb * frac)
+
+    def can_schedule_now(self, job: Job) -> bool:
+        return self.find_placement(job, mode="pack") is not None
+
+    # -------------------------------------------------------------- placements --
+    def find_placement(self, job: Job, mode: str = "pack") -> Placement | None:
+        """Greedy gang placement. mode: 'pack' (most-loaded-first) or
+        'spread' (least-loaded-first / fewest co-tenants)."""
+        eligible = self.nodes_for(job)
+        order = np.argsort(self.free_gpus if mode == "pack" else -self.free_gpus,
+                           kind="stable")
+        need = job.num_gpus
+        placement: Placement = {}
+        for i in order:
+            if not eligible[i] or need <= 0:
+                continue
+            take = int(min(need, self.free_gpus[i]))
+            # shrink until CPU/mem coupling fits
+            while take > 0 and not self._fits_node(job, int(i), take):
+                take -= 1
+            if take > 0:
+                placement[int(i)] = take
+                need -= take
+        return placement if need == 0 else None
+
+    def candidate_ways(self, job: Job) -> list[Placement]:
+        """Distinct candidate placements (spread & pack at minimum)."""
+        ways: list[Placement] = []
+        for mode in ("spread", "pack"):
+            p = self.find_placement(job, mode)
+            if p is not None and p not in ways:
+                ways.append(p)
+        # single-node way if the job fits whole on one eligible node
+        eligible = self.nodes_for(job)
+        for i in np.argsort(self.free_gpus, kind="stable"):
+            if eligible[i] and self._fits_node(job, int(i), job.num_gpus):
+                p = {int(i): job.num_gpus}
+                if p not in ways:
+                    ways.append(p)
+                break
+        return ways
+
+    def num_ways_to_schedule(self, job: Job) -> int:
+        return len(self.candidate_ways(job))
+
+    # -------------------------------------------------------------- mutation ----
+    def allocate(self, job: Job, placement: Placement) -> None:
+        for i, g in placement.items():
+            frac = g / max(job.num_gpus, 1)
+            assert self.free_gpus[i] >= g, "GPU oversubscription"
+            self.free_gpus[i] -= g
+            self.free_cpus[i] -= round(job.req_cpus * frac)
+            self.free_mem[i] -= job.req_mem_gb * frac
+            assert self.free_cpus[i] >= 0 and self.free_mem[i] >= -1e-9
+
+    def release(self, job: Job, placement: Placement) -> None:
+        for i, g in placement.items():
+            frac = g / max(job.num_gpus, 1)
+            self.free_gpus[i] += g
+            self.free_cpus[i] += round(job.req_cpus * frac)
+            self.free_mem[i] += job.req_mem_gb * frac
+            assert self.free_gpus[i] <= self.total_gpus[i], "double release"
+
+    def placement_speed(self, placement: Placement) -> float:
+        """Effective speed of a gang placement = slowest member SKU."""
+        return float(min(self.speeds[i] for i in placement)) if placement else 1.0
+
+    # ------------------------------------------------------------------ faults --
+    def fail_node(self, node_id: int) -> None:
+        self.node_down[node_id] = True
+
+    def recover_node(self, node_id: int) -> None:
+        self.node_down[node_id] = False
+
+    # ------------------------------------------------------------------ stats ---
+    def utilization(self) -> float:
+        tot = int(self.total_gpus.sum())
+        return float((self.total_gpus - self.free_gpus).sum() / max(tot, 1))
+
+    def fragmentation(self) -> float:
+        """Cluster Fragmentation Factor, Eq. (3) (normalized to [0, 1])."""
+        total_free = float(self.free_gpus.sum())
+        if total_free <= 0:
+            return 0.0
+        # sum of squares is maximal when all free GPUs sit on one node
+        conc = float((self.free_gpus.astype(np.float64) ** 2).sum()) / (total_free ** 2)
+        return 1.0 - conc

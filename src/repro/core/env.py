@@ -1,0 +1,83 @@
+"""RL environment glue: prioritizers that drive the simulator.
+
+RLPrioritizer implements the paper's RL pipeline: build state (FBM + feature
+sampling), run the actor, return a ranking whose head is the sampled action
+(exploration) or the greedy argmax (evaluation).
+
+InspectorPrioritizer reimplements the *mechanism* of SchedInspector (Zhang et
+al. '22) for the Table-9 comparison: a base heuristic proposes the ranking and
+an RL gate decides execute-vs-skip for the head job.
+
+NaiveRLPrioritizer (raw features, no sampling) + allocator="pack" reproduces
+both naive-RLTune (Fig. 10) and the RLScheduler mechanism adapted to GPUs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.agent import PPOAgent
+from repro.core.cluster import ClusterState
+from repro.core.features import MAX_QUEUE_SIZE, build_state
+from repro.core.policies import Policy
+from repro.core.types import Job
+
+
+class RLPrioritizer:
+    """The RLTune prioritizer (pro- or naive- variant)."""
+
+    def __init__(self, agent: PPOAgent, *, explore: bool = True,
+                 use_estimates: bool = False, raw_features: bool = False):
+        self.agent = agent
+        self.explore = explore
+        self.use_estimates = use_estimates
+        self.raw_features = raw_features
+
+    def rank(self, jobs: list[Job], cluster: ClusterState, now: float) -> list[int]:
+        ov, cv, mask = build_state(jobs, cluster, now,
+                                   use_estimates=self.use_estimates,
+                                   raw=self.raw_features)
+        action, logits = self.agent.act(ov, cv, mask, explore=self.explore,
+                                        record=self.explore)
+        n = min(len(jobs), MAX_QUEUE_SIZE)
+        order = list(np.argsort(-logits[:n], kind="stable"))
+        if action < n:
+            order.remove(action)
+            order.insert(0, action)
+        # jobs beyond the fixed-size window keep FIFO order at the tail
+        order += list(range(n, len(jobs)))
+        return order
+
+    def observe_finish(self, job: Job) -> None:
+        pass
+
+
+class InspectorPrioritizer:
+    """SchedInspector mechanism: base-policy ranking + RL execute/skip gate.
+
+    The gate reuses the PPO agent with a 2-way action space encoded by
+    restricting the mask to the first two queue slots: slot0 = execute the
+    base decision, slot1 = skip this round (head job demoted once).
+    """
+
+    def __init__(self, agent: PPOAgent, base_policy: Policy, *,
+                 explore: bool = True, use_estimates: bool = False):
+        self.agent = agent
+        self.base = base_policy
+        self.explore = explore
+        self.use_estimates = use_estimates
+
+    def rank(self, jobs: list[Job], cluster: ClusterState, now: float) -> list[int]:
+        scores = [self.base.score(j, now) for j in jobs]
+        order = list(np.argsort(scores, kind="stable"))
+        ov, cv, _ = build_state([jobs[i] for i in order], cluster, now,
+                                use_estimates=self.use_estimates)
+        gate_mask = np.zeros((MAX_QUEUE_SIZE,), dtype=np.float32)
+        gate_mask[:min(2, len(jobs))] = 1.0
+        action, _ = self.agent.act(ov, cv, gate_mask, explore=self.explore,
+                                   record=self.explore)
+        if action == 1 and len(order) > 1:   # skip: demote the head once
+            order.append(order.pop(0))
+        return order
+
+    def observe_finish(self, job: Job) -> None:
+        self.base.observe_finish(job)

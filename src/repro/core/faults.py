@@ -1,0 +1,65 @@
+"""Fault-tolerance model for the cluster simulator.
+
+Node failures (Poisson per node), repair times, straggler (slow-node) events,
+and job checkpoint/restart semantics: a killed job loses work back to its last
+checkpoint and is re-queued.  The scheduler sees failures only through the
+cluster state (fewer free GPUs, re-queued jobs aging) — consistent with the
+paper's application-agnostic stance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FaultModel:
+    """Configuration for failure injection."""
+
+    mtbf_per_node: float = 30 * 86400.0      # mean time between failures, per node
+    repair_time: float = 2 * 3600.0
+    straggler_prob: float = 0.01             # P(node slows) per failure draw
+    straggler_slowdown: float = 0.5          # speed multiplier while straggling
+    straggler_duration: float = 4 * 3600.0
+    ckpt_interval: float = 1800.0            # job checkpoint period (seconds)
+    seed: int = 0
+
+
+class FaultInjector:
+    """Generates failure / recovery / straggler events for a cluster."""
+
+    def __init__(self, model: FaultModel, num_nodes: int, horizon: float):
+        self.model = model
+        rng = np.random.default_rng(model.seed)
+        self.events: list[tuple[float, str, int]] = []  # (time, kind, node)
+        for node in range(num_nodes):
+            t = 0.0
+            while True:
+                t += float(rng.exponential(model.mtbf_per_node))
+                if t >= horizon:
+                    break
+                if rng.random() < model.straggler_prob:
+                    heapq.heappush(self.events, (t, "slow", node))
+                    heapq.heappush(self.events, (t + model.straggler_duration,
+                                                 "unslow", node))
+                else:
+                    heapq.heappush(self.events, (t, "fail", node))
+                    heapq.heappush(self.events, (t + model.repair_time, "recover", node))
+
+    def next_event_time(self) -> float:
+        return self.events[0][0] if self.events else float("inf")
+
+    def pop_due(self, now: float) -> list[tuple[float, str, int]]:
+        due = []
+        while self.events and self.events[0][0] <= now + 1e-9:
+            due.append(heapq.heappop(self.events))
+        return due
+
+    def checkpointed_progress(self, elapsed: float, runtime: float) -> float:
+        """Fraction of work preserved at the last checkpoint boundary."""
+        if runtime <= 0:
+            return 0.0
+        k = int(elapsed // self.model.ckpt_interval)
+        return min(1.0, k * self.model.ckpt_interval / runtime)

@@ -1,0 +1,156 @@
+"""Feature Building Module (FBM) + heuristic feature sampling (Sec. 3.2).
+
+17 features per job are maintained; a heuristic sampler selects 8 for the
+Observation Vector (OV) consumed by the actor and 5 core features for the
+Critic Vector (CV).  All values are normalized to keep the RL input bounded.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cluster import ClusterState
+from repro.core.types import Job
+
+# canonical feature ordering (17 features total, Table 3)
+FEATURE_NAMES: tuple[str, ...] = (
+    # visible job features
+    "job_id", "user", "req_gpus", "vc", "gpu_type_idx",
+    "req_time", "submit_time", "req_cpu", "req_mem",
+    # cluster characteristics
+    "free_nodes", "can_schedule_now", "num_ways_to_schedule",
+    # engineered features
+    "dsr", "job_size", "urgency", "future_avail", "cff",
+)
+NUM_FEATURES = len(FEATURE_NAMES)
+OV_SIZE = 8       # actor observation features per job
+CV_SIZE = 5       # critic features per job
+MAX_QUEUE_SIZE = 256
+
+_IDX = {n: i for i, n in enumerate(FEATURE_NAMES)}
+
+# the five core critic features (submit time, run time, can_schedule_now, ...)
+CV_FEATURES = ("submit_time", "req_time", "can_schedule_now", "req_gpus", "urgency")
+
+
+def _norm(x: float, scale: float) -> float:
+    """Squash to [0, 1) with a soft scale (robust to heavy tails)."""
+    return float(x / (x + scale)) if x > 0 else 0.0
+
+
+def build_features(
+    jobs: list[Job],
+    cluster: ClusterState,
+    now: float,
+    *,
+    use_estimates: bool = False,
+) -> np.ndarray:
+    """(len(jobs), 17) feature matrix for the current queue at time `now`."""
+    n = len(jobs)
+    out = np.zeros((n, NUM_FEATURES), dtype=np.float32)
+    if n == 0:
+        return out
+
+    total_free = float(cluster.free_gpus[~cluster.node_down].sum())
+    free_nodes = int(((cluster.free_gpus == cluster.total_gpus) & ~cluster.node_down).sum())
+    cff = cluster.fragmentation()
+    gpu_types = sorted(set(cluster.gpu_types)) + ["any"]
+    # total demand pending per type (for future availability Eq. (2))
+    queued_demand = sum(j.num_gpus for j in jobs)
+
+    for k, j in enumerate(jobs):
+        rt = j.est_runtime if use_estimates else j.runtime
+        wait = max(0.0, now - j.submit_time)
+        ways = cluster.num_ways_to_schedule(j)
+
+        free_t = cluster.free_gpus_of_type(j.gpu_type)
+        # Eq. (1): demand-supply ratio for the requested type, normalized
+        dsr = _norm(j.num_gpus / max(free_t, 1), 1.0)
+        # Eq. (2): expected free GPUs after placing this job and the rest of
+        # the queue's demand, normalized to [-1, 1] by total capacity
+        fa = (total_free - j.num_gpus - (queued_demand - j.num_gpus)) \
+            / max(float(cluster.total_gpus.sum()), 1.0)
+        # job size & urgency
+        size = _norm(j.num_gpus * rt, 8.0 * 3600.0 * 8.0)
+        urgency = _norm(wait / max(rt, 60.0), 4.0)
+
+        out[k, _IDX["job_id"]] = j.job_id % 1000 / 1000.0
+        out[k, _IDX["user"]] = (j.user % 128) / 128.0
+        out[k, _IDX["req_gpus"]] = _norm(j.num_gpus, 8.0)
+        out[k, _IDX["vc"]] = j.vc / 8.0
+        out[k, _IDX["gpu_type_idx"]] = gpu_types.index(j.gpu_type) / max(len(gpu_types), 1)
+        out[k, _IDX["req_time"]] = _norm(rt, 8 * 3600.0)
+        out[k, _IDX["submit_time"]] = _norm(wait, 3600.0)   # age since submission
+        out[k, _IDX["req_cpu"]] = _norm(j.req_cpus, 64.0)
+        out[k, _IDX["req_mem"]] = _norm(j.req_mem_gb, 512.0)
+        out[k, _IDX["free_nodes"]] = free_nodes / max(len(cluster.gpu_types), 1)
+        out[k, _IDX["can_schedule_now"]] = 1.0 if ways > 0 else 0.0
+        out[k, _IDX["num_ways_to_schedule"]] = ways / 4.0
+        out[k, _IDX["dsr"]] = dsr
+        out[k, _IDX["job_size"]] = size
+        out[k, _IDX["urgency"]] = urgency
+        out[k, _IDX["future_avail"]] = np.clip(fa, -1.0, 1.0)
+        out[k, _IDX["cff"]] = cff
+    return out
+
+
+def sample_features(feats: np.ndarray, cluster: ClusterState) -> tuple[np.ndarray, list[str]]:
+    """Heuristic feature sampling: pick the 8 most situationally relevant
+    features (Sec. 3.2).  Returns (n, 8) OV plus the chosen feature names.
+
+    - high fragmentation  -> weight job_size (short jobs fill fragmented nodes)
+    - low fragmentation   -> weight urgency (boost aged jobs)
+    - flexible placements -> weight num_ways_to_schedule
+    """
+    cff = cluster.fragmentation()
+    base = ["req_gpus", "req_time", "submit_time", "can_schedule_now",
+            "dsr", "future_avail"]
+    if cff > 0.5:
+        chosen = base + ["job_size", "num_ways_to_schedule"]
+        weights = {"job_size": 1.5, "num_ways_to_schedule": 1.25}
+    else:
+        chosen = base + ["urgency", "num_ways_to_schedule"]
+        weights = {"urgency": 1.5, "num_ways_to_schedule": 1.25}
+    idx = [_IDX[n] for n in chosen]
+    ov = feats[:, idx].copy()
+    for j, name in enumerate(chosen):
+        ov[:, j] *= weights.get(name, 1.0)
+    return ov.astype(np.float32), chosen
+
+
+def critic_features(feats: np.ndarray) -> np.ndarray:
+    """(n, 5) critic vector (submit time, run time, can_schedule_now, ...)."""
+    idx = [_IDX[n] for n in CV_FEATURES]
+    return feats[:, idx].astype(np.float32)
+
+
+def pad_to_queue(x: np.ndarray, width: int, max_queue: int = MAX_QUEUE_SIZE) -> np.ndarray:
+    """Zero-pad (n, width) -> (max_queue, width); truncates overflow."""
+    out = np.zeros((max_queue, width), dtype=np.float32)
+    n = min(x.shape[0], max_queue)
+    if n:
+        out[:n] = x[:n]
+    return out
+
+
+def build_state(
+    jobs: list[Job],
+    cluster: ClusterState,
+    now: float,
+    *,
+    use_estimates: bool = False,
+    raw: bool = False,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Full state construction: returns (OV [256,8], CV [256,5], mask [256]).
+
+    raw=True is the naive-RLTune ablation: the first 8 raw trace features are
+    used directly with no engineering or sampling (Fig. 10).
+    """
+    feats = build_features(jobs, cluster, now, use_estimates=use_estimates)
+    if raw:
+        ov = feats[:, :OV_SIZE]
+    else:
+        ov, _ = sample_features(feats, cluster)
+    cv = critic_features(feats)
+    mask = np.zeros((MAX_QUEUE_SIZE,), dtype=np.float32)
+    mask[:min(len(jobs), MAX_QUEUE_SIZE)] = 1.0
+    return pad_to_queue(ov, OV_SIZE), pad_to_queue(cv, CV_SIZE), mask

@@ -1,0 +1,219 @@
+"""MILP-based allocation optimization (Algorithm 1 of the paper).
+
+A binary variable `x` selects way1 (spreading) vs way2 (packing) for the head
+job; a boolean occupancy matrix `CJO` (node x GPU-slot) is constrained by
+per-node GPU/CPU/memory capacity; the objective maximizes total GPU occupancy.
+Look-ahead: the top-K prioritized queue jobs are modeled as extra integer
+allocation layers so the spread-vs-pack choice accounts for upcoming demand
+(Sec. 3.2 "current and future job requirements ... across multiple time slots").
+
+The paper uses CVXPY + GLPK_MI; this container has no GLPK, so we solve the
+identical formulation with `scipy.optimize.milp` (HiGHS, also exact MI).  A
+greedy fragmentation-aware fallback handles solver absence/failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+try:  # pragma: no cover - import guard
+    from scipy.optimize import Bounds, LinearConstraint, milp
+    _HAVE_SCIPY = True
+except Exception:  # pragma: no cover
+    _HAVE_SCIPY = False
+
+from repro.core.cluster import ClusterState, Placement
+from repro.core.types import Job
+
+
+@dataclasses.dataclass
+class MILPResult:
+    placement: Placement
+    way_index: int            # 0 = way1 (spread), 1 = way2 (pack)
+    objective: float
+    used_solver: bool
+    lookahead_scheduled: int  # how many look-ahead jobs the solution also fits
+
+
+def _slot_ranges(ways: list[Placement]) -> list[dict[int, tuple[int, int]]]:
+    """Assign disjoint symbolic slot ranges per node for each way so the
+    equality constraints of Algorithm 1 never collide on shared nodes."""
+    offset: dict[int, int] = {}
+    ranges: list[dict[int, tuple[int, int]]] = []
+    for way in ways:
+        r: dict[int, tuple[int, int]] = {}
+        for node, cnt in way.items():
+            s = offset.get(node, 0)
+            r[node] = (s, s + cnt)
+            offset[node] = s + cnt
+        ranges.append(r)
+    return ranges
+
+
+def choose_allocation(
+    cluster: ClusterState,
+    job: Job,
+    ways: list[Placement],
+    lookahead: list[Job] | None = None,
+    *,
+    lookahead_k: int = 8,
+    use_solver: bool = True,
+) -> MILPResult:
+    """Pick the best of `ways` for `job` under multi-resource + look-ahead MILP.
+
+    `ways` must be non-empty feasible placements (way1=spread first, way2=pack).
+    """
+    assert ways, "choose_allocation requires at least one candidate way"
+    if len(ways) == 1:
+        return MILPResult(ways[0], 0, float(job.num_gpus), False, 0)
+    ways = ways[:2]  # Algorithm 1 is binary: way1 vs way2
+    lookahead = (lookahead or [])[:lookahead_k]
+
+    if use_solver and _HAVE_SCIPY:
+        res = _solve_milp(cluster, job, ways, lookahead)
+        if res is not None:
+            return res
+    return _greedy_choice(cluster, job, ways, lookahead)
+
+
+# ---------------------------------------------------------------------- solver ---
+
+
+def _solve_milp(
+    cluster: ClusterState,
+    job: Job,
+    ways: list[Placement],
+    lookahead: list[Job],
+) -> MILPResult | None:
+    n_nodes = len(cluster.gpu_types)
+    gpn = int(cluster.total_gpus.max())             # gpus_per_node (slot count)
+    K = len(lookahead)
+
+    # variable layout: [x | CJO (n_nodes*gpn) | y (K*n_nodes) | z (K)]
+    n_cjo = n_nodes * gpn
+    nvar = 1 + n_cjo + K * n_nodes + K
+
+    def cjo(i: int, g: int) -> int:
+        return 1 + i * gpn + g
+
+    def yvar(k: int, i: int) -> int:
+        return 1 + n_cjo + k * n_nodes + i
+
+    def zvar(k: int) -> int:
+        return 1 + n_cjo + K * n_nodes + k
+
+    lb = np.zeros(nvar)
+    ub = np.ones(nvar)
+    integrality = np.ones(nvar)
+    # y are integer GPU counts, bounded by node free GPUs and job demand
+    for k, lj in enumerate(lookahead):
+        elig = cluster.nodes_for(lj)
+        for i in range(n_nodes):
+            ub[yvar(k, i)] = min(cluster.free_gpus[i], lj.num_gpus) if elig[i] else 0
+
+    A_rows, lbs, ubs = [], [], []
+
+    def add(row: np.ndarray, lo: float, hi: float) -> None:
+        A_rows.append(row)
+        lbs.append(lo)
+        ubs.append(hi)
+
+    # Algorithm 1 equality constraints: way slots tied to (1-x) / x
+    ranges = _slot_ranges(ways)
+    for w, (way, val_is_x) in enumerate(zip(ways, (False, True))):
+        for node, (s, e) in ranges[w].items():
+            for g in range(s, min(e, gpn)):
+                row = np.zeros(nvar)
+                row[cjo(node, g)] = 1.0
+                if val_is_x:   # CJO == x      -> CJO - x == 0
+                    row[0] = -1.0
+                    add(row, 0.0, 0.0)
+                else:          # CJO == 1 - x  -> CJO + x == 1
+                    row[0] = 1.0
+                    add(row, 1.0, 1.0)
+
+    cpu_pg = job.req_cpus / max(job.num_gpus, 1)
+    mem_pg = job.req_mem_gb / max(job.num_gpus, 1)
+    # per-node multi-resource capacity (GPU / CPU / memory)
+    for i in range(n_nodes):
+        g_row = np.zeros(nvar)
+        c_row = np.zeros(nvar)
+        m_row = np.zeros(nvar)
+        for g in range(gpn):
+            g_row[cjo(i, g)] = 1.0
+            c_row[cjo(i, g)] = cpu_pg
+            m_row[cjo(i, g)] = mem_pg
+        for k, lj in enumerate(lookahead):
+            g_row[yvar(k, i)] = 1.0
+            c_row[yvar(k, i)] = lj.req_cpus / max(lj.num_gpus, 1)
+            m_row[yvar(k, i)] = lj.req_mem_gb / max(lj.num_gpus, 1)
+        add(g_row, 0.0, float(cluster.free_gpus[i]))
+        add(c_row, 0.0, float(cluster.free_cpus[i]))
+        add(m_row, 0.0, float(cluster.free_mem[i]))
+
+    # gang constraint for look-ahead jobs: sum_i y[k,i] == req_k * z_k
+    for k, lj in enumerate(lookahead):
+        row = np.zeros(nvar)
+        for i in range(n_nodes):
+            row[yvar(k, i)] = 1.0
+        row[zvar(k)] = -float(lj.num_gpus)
+        add(row, 0.0, 0.0)
+
+    # objective: maximize occupancy + decayed look-ahead placements
+    c = np.zeros(nvar)
+    c[1:1 + n_cjo] = -1.0
+    for k, lj in enumerate(lookahead):
+        c[zvar(k)] = -(0.5 ** (k + 1)) * lj.num_gpus
+
+    try:
+        res = milp(
+            c=c,
+            constraints=LinearConstraint(np.vstack(A_rows), np.array(lbs), np.array(ubs)),
+            integrality=integrality,
+            bounds=Bounds(lb, ub),
+            options={"time_limit": 2.0, "presolve": True},
+        )
+    except Exception:  # pragma: no cover - solver hiccup
+        return None
+    if not res.success or res.x is None:
+        return None
+    x = res.x[0]
+    way_index = 1 if x > 0.5 else 0
+    z_count = int(round(sum(res.x[zvar(k)] for k in range(K)))) if K else 0
+    return MILPResult(ways[way_index], way_index, -float(res.fun), True, z_count)
+
+
+# -------------------------------------------------------------------- fallback ---
+
+
+def _greedy_choice(
+    cluster: ClusterState,
+    job: Job,
+    ways: list[Placement],
+    lookahead: list[Job],
+) -> MILPResult:
+    """Fragmentation-aware heuristic: prefer packing when it leaves larger
+    contiguous blocks for upcoming multi-GPU jobs; spread under contention."""
+    def score(way: Placement) -> float:
+        free_after = cluster.free_gpus.copy()
+        for i, g in way.items():
+            free_after[i] -= g
+        # largest contiguous block preserved + look-ahead satisfiability
+        big = float(free_after.max()) if len(free_after) else 0.0
+        satisfied = 0.0
+        tmp = np.sort(free_after)[::-1].astype(float)
+        for k, lj in enumerate(lookahead):
+            need = lj.num_gpus
+            for ii in range(len(tmp)):
+                take = min(tmp[ii], need)
+                tmp[ii] -= take
+                need -= take
+                if need <= 0:
+                    satisfied += 0.5 ** (k + 1)
+                    break
+        return big * 0.01 + satisfied
+
+    scores = [score(w) for w in ways]
+    idx = int(np.argmax(scores))
+    return MILPResult(ways[idx], idx, scores[idx], False, 0)

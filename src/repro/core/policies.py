@@ -1,0 +1,165 @@
+"""Baseline scheduling policies (Table 5) + Slurm multifactor + QSSF.
+
+Each policy maps (job, now) -> score; the simulator schedules the job with the
+LOWEST score first (RLScheduler convention).  Runtime `rt` uses the user
+estimate when `use_estimates=True` (evaluation) and ground truth otherwise.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Protocol
+
+from repro.core.types import Job
+
+ScoreFn = Callable[[Job, float], float]
+
+
+class Policy(Protocol):
+    name: str
+
+    def score(self, job: Job, now: float) -> float: ...
+    def observe_finish(self, job: Job) -> None: ...
+
+
+def _rt(job: Job, use_estimates: bool) -> float:
+    return max(job.est_runtime if use_estimates else job.runtime, 1.0)
+
+
+class _FnPolicy:
+    """Stateless policy from a score function."""
+
+    def __init__(self, name: str, fn: Callable[[Job, float, bool], float],
+                 use_estimates: bool = False):
+        self.name = name
+        self._fn = fn
+        self.use_estimates = use_estimates
+
+    def score(self, job: Job, now: float) -> float:
+        return self._fn(job, now, self.use_estimates)
+
+    def observe_finish(self, job: Job) -> None:  # stateless
+        pass
+
+
+def _fcfs(j: Job, now: float, est: bool) -> float:
+    return j.submit_time
+
+
+def _sjf(j: Job, now: float, est: bool) -> float:
+    return _rt(j, est)
+
+
+def _wfp3(j: Job, now: float, est: bool) -> float:
+    wt = max(0.0, now - j.submit_time)
+    rt = _rt(j, est)
+    return -((wt / rt) ** 3) * j.num_gpus
+
+
+def _unicep(j: Job, now: float, est: bool) -> float:
+    wt = max(0.0, now - j.submit_time)
+    rt = _rt(j, est)
+    return -wt / (math.log2(max(j.num_gpus, 2)) * rt)
+
+
+def _f1(j: Job, now: float, est: bool) -> float:
+    rt = _rt(j, est)
+    st = max(j.submit_time, 1.0)
+    return math.log10(rt) * j.num_gpus + 870.0 * math.log10(st)
+
+
+class SlurmMultifactor:
+    """Slurm's multifactor priority plugin, GPU-adapted (Sec. 5.4).
+
+    priority = w_age*age + w_fairshare*fairshare + w_jobsize*jobsize
+             + w_partition*partition + w_qos*qos,  all weights = 1000.
+    Higher priority first => score = -priority.
+    Fairshare maps CPU fair-share math onto GPU-seconds usage with decay.
+    """
+
+    name = "slurm-mf"
+
+    def __init__(self, use_estimates: bool = False, half_life: float = 7 * 86400.0):
+        self.use_estimates = use_estimates
+        self.half_life = half_life
+        self._usage: dict[int, float] = {}   # user -> decayed GPU-seconds
+        self._last_decay = 0.0
+        self.weights = dict(age=1000.0, fairshare=1000.0, jobsize=1000.0,
+                            partition=1000.0, qos=1000.0)
+
+    def _decay(self, now: float) -> None:
+        dt = now - self._last_decay
+        if dt <= 0:
+            return
+        f = 0.5 ** (dt / self.half_life)
+        for u in self._usage:
+            self._usage[u] *= f
+        self._last_decay = now
+
+    def score(self, job: Job, now: float) -> float:
+        self._decay(now)
+        age = min(max(0.0, now - job.submit_time) / (7 * 86400.0), 1.0)
+        total = sum(self._usage.values()) + 1e-9
+        share = self._usage.get(job.user, 0.0) / total
+        fairshare = 2.0 ** (-share * 8.0)            # low usage => high factor
+        rt = _rt(job, self.use_estimates)
+        jobsize = 1.0 / (1.0 + math.log1p(rt / 3600.0))  # requested runtime factor
+        partition = 1.0 - (job.vc / 10.0)            # per-queue priority
+        qos = 1.0
+        w = self.weights
+        pri = (w["age"] * age + w["fairshare"] * fairshare + w["jobsize"] * jobsize
+               + w["partition"] * partition + w["qos"] * qos)
+        return -pri
+
+    def observe_finish(self, job: Job) -> None:
+        self._usage[job.user] = (self._usage.get(job.user, 0.0)
+                                 + job.runtime * job.num_gpus)
+
+
+class QSSF:
+    """Quasi-Shortest-Service-First (Helios, Hu et al. '21).
+
+    Service = predicted_runtime * num_gpus; prediction is history-based:
+    the rolling mean of the user's past runtimes (cold-start: user estimate).
+    """
+
+    name = "qssf"
+
+    def __init__(self, use_estimates: bool = True, window: int = 16):
+        self.use_estimates = use_estimates
+        self.window = window
+        self._hist: dict[int, list[float]] = {}
+
+    def predict_runtime(self, job: Job) -> float:
+        h = self._hist.get(job.user)
+        if not h:
+            return _rt(job, self.use_estimates)
+        return sum(h) / len(h)
+
+    def score(self, job: Job, now: float) -> float:
+        return self.predict_runtime(job) * job.num_gpus
+
+    def observe_finish(self, job: Job) -> None:
+        h = self._hist.setdefault(job.user, [])
+        h.append(job.runtime)
+        if len(h) > self.window:
+            h.pop(0)
+
+
+_FNS: dict[str, Callable[[Job, float, bool], float]] = {
+    "fcfs": _fcfs, "fifo": _fcfs, "sjf": _sjf, "wfp3": _wfp3,
+    "unicep": _unicep, "f1": _f1,
+}
+
+
+def make_policy(name: str, use_estimates: bool = False) -> Policy:
+    name = name.lower()
+    if name in _FNS:
+        return _FnPolicy(name, _FNS[name], use_estimates)
+    if name in ("slurm", "slurm-mf", "multifactor"):
+        return SlurmMultifactor(use_estimates)
+    if name == "qssf":
+        return QSSF(use_estimates)
+    raise ValueError(f"unknown policy {name!r}")
+
+
+BASE_POLICIES = ("fcfs", "sjf", "wfp3", "unicep", "f1", "qssf", "slurm-mf")

@@ -1,0 +1,108 @@
+"""Core datatypes for the RLTune scheduler.
+
+Jobs and nodes mirror the visible metadata available in the Philly / Helios /
+Alibaba traces (Table 4 of the paper): the scheduler is application-agnostic,
+so a Job carries *only* user-submitted metadata — never model semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class JobState(enum.Enum):
+    PENDING = 0
+    RUNNING = 1
+    COMPLETED = 2
+    FAILED = 3
+
+
+@dataclasses.dataclass
+class Job:
+    """A DL job as seen by the scheduler (visible features only)."""
+
+    job_id: int
+    user: int
+    submit_time: float          # seconds since trace start
+    runtime: float              # ground-truth runtime (training reward signal)
+    est_runtime: float          # user-provided (noisy) estimate, used at eval
+    num_gpus: int               # gang-scheduled GPU demand
+    gpu_type: str = "any"       # requested accelerator SKU ("any" = flexible)
+    vc: int = 0                 # virtual cluster id
+    req_cpus: int = 0           # 0 => inferred from GPU share
+    req_mem_gb: float = 0.0     # 0 => inferred from GPU share
+    arch: str = ""              # informational only (NOT visible to the agent)
+
+    # -- mutable scheduling state -------------------------------------------------
+    state: JobState = JobState.PENDING
+    start_time: float = -1.0
+    finish_time: float = -1.0
+    placement: Optional[dict[int, int]] = None   # node_id -> gpus taken
+    restarts: int = 0
+    progress_at_ckpt: float = 0.0  # fraction of work checkpointed (fault tolerance)
+
+    def __post_init__(self) -> None:
+        if self.req_cpus <= 0:
+            # GPU-proportionate CPU allocation (Sec. 2 of the paper)
+            self.req_cpus = max(1, 4 * self.num_gpus)
+        if self.req_mem_gb <= 0:
+            self.req_mem_gb = 32.0 * self.num_gpus
+
+    # -- derived metrics ------------------------------------------------------------
+    @property
+    def wait_time(self) -> float:
+        assert self.start_time >= 0
+        return self.start_time - self.submit_time
+
+    @property
+    def jct(self) -> float:
+        assert self.finish_time >= 0
+        return self.finish_time - self.submit_time
+
+    def bsld(self, tau: float = 10.0) -> float:
+        """Bounded slowdown (Feitelson & Rudolph), bound tau seconds."""
+        assert self.finish_time >= 0
+        return max(1.0, self.jct / max(self.runtime, tau))
+
+    def clone_pending(self) -> "Job":
+        """A fresh PENDING copy (for replaying the same batch through two pipelines)."""
+        return Job(
+            job_id=self.job_id, user=self.user, submit_time=self.submit_time,
+            runtime=self.runtime, est_runtime=self.est_runtime,
+            num_gpus=self.num_gpus, gpu_type=self.gpu_type, vc=self.vc,
+            req_cpus=self.req_cpus, req_mem_gb=self.req_mem_gb, arch=self.arch,
+        )
+
+
+@dataclasses.dataclass
+class NodeSpec:
+    """Static description of one node in a heterogeneous cluster."""
+
+    node_id: int
+    gpu_type: str
+    num_gpus: int
+    num_cpus: int
+    mem_gb: float
+    # relative speed of this SKU vs the trace's reference GPU; the simulator
+    # scales runtimes by 1/speed when a job lands on a faster/slower SKU.
+    speed: float = 1.0
+
+
+@dataclasses.dataclass
+class ClusterSpec:
+    """A heterogeneous cluster: an ordered list of node specs."""
+
+    nodes: list[NodeSpec]
+    name: str = "cluster"
+
+    @property
+    def total_gpus(self) -> int:
+        return sum(n.num_gpus for n in self.nodes)
+
+    @property
+    def gpu_types(self) -> list[str]:
+        return sorted({n.gpu_type for n in self.nodes})
+
+    def gpus_of_type(self, t: str) -> int:
+        return sum(n.num_gpus for n in self.nodes if n.gpu_type == t)

@@ -1,0 +1,3 @@
+from repro.data.lm_data import SyntheticLMDataset, batch_for
+
+__all__ = ["SyntheticLMDataset", "batch_for"]

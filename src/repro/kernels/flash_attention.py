@@ -1,0 +1,121 @@
+"""Flash attention Pallas TPU kernel (causal / sliding-window, GQA).
+
+Blockwise online-softmax attention: grid (B*H, nq, nk) with the kv axis
+innermost so VMEM scratch (acc, m, l) carries across kv blocks of one
+(head, q-block).  Causal + SWA handled by block skipping (pl.when) and an
+in-block position mask.  MXU alignment: block sizes are multiples of 128 on
+the seq dims; head_dim is padded to 128 lanes by the wrapper in ops.py.
+
+TPU adaptation of the GPU flash algorithm: instead of warp-level tiling we
+tile for VMEM residency (q block + kv block + f32 accumulators must fit) and
+let the MXU consume (bq x d) @ (d x bk) whole-block matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, causal: bool, window: int,
+                  sm_scale: float, nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                   # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                             # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                   # (bk, d)
+        acc_scr[...] = acc_scr[...] * alpha + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal or window > 0:
+        # skip fully-masked kv blocks
+        ok = k_start <= q_start + block_q - 1
+        if window > 0:
+            ok &= k_start + block_k - 1 > q_start - window
+        pl.when(ok)(compute)
+    else:
+        compute()
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret",
+                                             "sm_scale"))
+def flash_attention_bh(q, k, v, *, causal: bool = True, window: int = 0,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: bool = False, sm_scale: float | None = None):
+    """q: (BH, L, D); k, v: (BH, Lk, D) — kv already broadcast per q-head.
+    Returns (BH, L, D).  sm_scale: pass 1/sqrt(unpadded head_dim) when D is
+    lane-padded."""
+    BH, L, D = q.shape
+    Lk = k.shape[1]
+    block_q = min(block_q, L)
+    block_k = min(block_k, Lk)
+    assert L % block_q == 0 and Lk % block_k == 0
+    nq, nk = L // block_q, Lk // block_k
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, sm_scale=sm_scale, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, L, D), q.dtype),
+        scratch_shapes=[
+            # (bq, 1) running max / denom + (bq, D) accumulator, all f32 VMEM
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,65 @@
+"""Fused MoE router Pallas kernel: logits -> top-k -> softmax over the k.
+
+Grid over token blocks; the router weight (d, E) stays resident in VMEM
+across the grid (index_map constant), the token block (bt, d) streams in,
+and the iterative top-k (k is small: 2/8) runs as k masked row-max passes —
+avoiding an HBM round trip for the (T, E) logits and the sort.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _router_kernel(x_ref, w_ref, wout_ref, iout_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)                   # (bt, d)
+    w = w_ref[...].astype(jnp.float32)                   # (d, E)
+    logits = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    bt, E = logits.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
+    work = logits
+    vals = []
+    idxs = []
+    for _ in range(k):
+        m = jnp.max(work, axis=1, keepdims=True)         # (bt, 1)
+        amax = jnp.argmax(work, axis=1)                  # (bt,)
+        vals.append(m[:, 0])
+        idxs.append(amax.astype(jnp.int32))
+        work = jnp.where(cols == amax[:, None], NEG_INF, work)
+    v = jnp.stack(vals, axis=1)                          # (bt, k)
+    i = jnp.stack(idxs, axis=1)                          # (bt, k)
+    p = jax.nn.softmax(v, axis=1)
+    wout_ref[...] = p.astype(wout_ref.dtype)
+    iout_ref[...] = i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_t", "interpret"))
+def moe_router(x, router_w, k: int, *, block_t: int = 256,
+               interpret: bool = False):
+    """x: (T, d); router_w: (d, E).  Returns (weights (T,k) f32, idx (T,k) i32)."""
+    T, d = x.shape
+    E = router_w.shape[1]
+    block_t = min(block_t, T)
+    assert T % block_t == 0
+    kernel = functools.partial(_router_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(T // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, E), lambda i: (0, 0)),     # resident in VMEM
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((T, k), jnp.float32),
+                   jax.ShapeDtypeStruct((T, k), jnp.int32)],
+        interpret=interpret,
+    )(x, router_w)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (BH, Lq, D); k, v: (BH, Lk, D) -> (BH, Lq, D). Naive softmax attn."""
+    BH, Lq, D = q.shape
+    Lk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    qpos = jnp.arange(Lq)[:, None]
+    kpos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(v.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bs, Cs):
+    """Naive quadratic SSD (1-semiseparable attention form).
+
+    x: (B, H, L, P); dt: (B, H, L, 1); A: (H,); Bs/Cs: (B, L, N).
+    y[t] = sum_{s<=t} (C_t . B_s) * exp(sum_{u in (s, t]} dt_u A_h) * dt_s x_s
+    """
+    B, H, L, P = x.shape
+    a = dt[..., 0] * A[None, :, None]                    # (B, H, L)
+    cs = jnp.cumsum(a, axis=-1)
+    decay = jnp.exp(cs[..., :, None] - cs[..., None, :])  # (B, H, L, L)
+    ii = jnp.arange(L)
+    tri = (ii[None, :] <= ii[:, None])[None, None]       # s <= t
+    G = jnp.einsum("btn,bsn->bts", Cs.astype(jnp.float32),
+                   Bs.astype(jnp.float32))               # (B, L, L)
+    W = jnp.where(tri, G[:, None] * decay, 0.0)          # (B, H, L, L)
+    xdt = x.astype(jnp.float32) * dt                     # (B, H, L, P)
+    y = jnp.einsum("bhts,bhsp->bhtp", W, xdt)
+    return y.astype(x.dtype)
+
+
+def policy_mlp_ref(x, w1, b1, w2, b2, w3, b3, mask):
+    h = jnp.tanh(x.astype(jnp.float32) @ w1.astype(jnp.float32) + b1)
+    h = jnp.tanh(h @ w2.astype(jnp.float32) + b2)
+    logits = (h @ w3.astype(jnp.float32) + b3)[:, 0]
+    return jnp.where(mask > 0, logits, -1e9)
+
+
+def moe_router_ref(x, router_w, k: int):
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    vals, idx = jax.lax.top_k(logits, k)
+    return jax.nn.softmax(vals, axis=-1), idx.astype(jnp.int32)

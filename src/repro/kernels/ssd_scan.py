@@ -1,0 +1,86 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+Grid (B, H, nc) with the chunk axis innermost: the (P, N) state carries in
+f32 VMEM scratch across chunks of one (batch, head).  Each chunk does the
+quadratic intra-chunk piece as (Q x Q) MXU matmuls plus the state
+update/output — the SSD formulation's whole point is that chunk-level
+matmuls replace the length-L sequential scan (TPU-friendly).
+
+Block shapes: Q (chunk) and N (state) are MXU-aligned by the wrapper
+(pad N to 128 lanes when smaller); P = head_dim rides in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_scr, *,
+                chunk: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (Q, 1)
+    A = a_ref[0].astype(jnp.float32)           # (1,) per-head decay rate
+    Bm = b_ref[0].astype(jnp.float32)          # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    a = dt * A                                 # (Q, 1) log-decay steps
+    cs = jnp.cumsum(a, axis=0)                 # inclusive
+    # intra-chunk: W[i,j] = (C_i . B_j) * exp(cs_i - cs_j) for j <= i
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    decay = jnp.exp(cs - cs.T)                 # (Q, Q) broadcast over columns
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    W = jnp.where(jj <= ii, G * decay, 0.0)
+    xdt = x * dt                               # (Q, P)
+    y = jax.lax.dot_general(W, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: y += exp(cs_i) * C_i . S   (S: (P, N))
+    y += jnp.exp(cs) * jax.lax.dot_general(
+        Cm, s_scr[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state update: S' = exp(total) * S + sum_j exp(total - cs_j) x_j B_j^T
+    total = cs[-1:, :]                         # (1, 1)
+    carry = jnp.exp(total - cs)                # (Q, 1)
+    dS = jax.lax.dot_general(xdt * carry, Bm, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (P, N)
+    s_scr[...] = s_scr[...] * jnp.exp(total[0, 0]) + dS
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_bh(x, dt, A, Bs, Cs, *, chunk: int = 256,
+                interpret: bool = False):
+    """x: (B, H, L, P); dt: (B, H, L, 1); A: (H,); Bs/Cs: (B, L, N).
+    Returns y: (B, H, L, P).  L % chunk == 0 (wrapper pads)."""
+    B, H, L, P = x.shape
+    N = Bs.shape[-1]
+    assert L % chunk == 0
+    nc = L // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1,), lambda b, h, ic: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, ic: (b, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, ic: (b, h, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bs, Cs)

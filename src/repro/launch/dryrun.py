@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent on the production
+mesh (16x16 single-pod, 2x16x16 multi-pod) without hardware: the jit step is
+lowered from ShapeDtypeStructs (no allocation), compiled, and its
+memory_analysis / cost_analysis / collective schedule recorded as JSON under
+benchmarks/artifacts/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as PS  # noqa: E402
+
+from repro.configs import (ALL_ARCHS, SHAPES, get_config, input_specs,  # noqa: E402
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import (analytic_cost, collective_bytes,  # noqa: E402
+                                   model_flops, roofline_terms)
+from repro.models.lm import LM, ModelImpl  # noqa: E402
+from repro.sharding.specs import (DEFAULT_RULES, logical_spec,  # noqa: E402
+                                  sanitize_spec, sanitize_tree)
+from repro.train.optimizer import OptConfig, abstract_opt_state, opt_specs  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+# per-arch train-step microbatching (activation memory control at batch 256)
+TRAIN_MICROBATCHES = {
+    "qwen3-moe-235b-a22b": 16,
+    "jamba-v0.1-52b": 8,
+    "nemotron-4-15b": 8,
+    "yi-6b": 4,
+    "internvl2-2b": 2,
+    "h2o-danube-1.8b": 2,
+    "stablelm-1.6b": 2,
+    "granite-moe-1b-a400m": 2,
+    "mamba2-780m": 2,
+    "whisper-tiny": 1,
+}
+LOSS_CHUNK = {"nemotron-4-15b": 512, "qwen3-moe-235b-a22b": 512}
+
+
+def _sharding(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, PS))
+
+
+def _batch_specs(cfg, shape, mesh, rules):
+    """PartitionSpecs for the input batch dict (divisibility-sanitized)."""
+    specs = {}
+    for key, sds in input_specs(cfg, shape).items():
+        if key in ("tokens", "labels"):
+            lg = ("batch", "seq")
+        elif key == "patch_embeds":
+            lg = ("batch", "seq", "embed_act")
+        else:  # audio_frames
+            lg = ("batch", "frames", "embed_act")
+        specs[key] = sanitize_spec(logical_spec(lg[:len(sds.shape)], rules, mesh),
+                                   sds.shape, mesh)
+    return specs
+
+
+def lower_cell(arch: str, shape_name: str, mesh, rules=None,
+               impl: ModelImpl | None = None, microbatches: int | None = None):
+    """Lower + compile one cell; returns (record dict, compiled)."""
+    rules = rules or DEFAULT_RULES
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    impl = impl or ModelImpl(loss_chunk=LOSS_CHUNK.get(arch, 0))
+    model = LM(cfg, impl=impl, rules=rules)
+    chips = mesh.size
+
+    abstract_params = model.abstract_params()
+    pspecs = sanitize_tree(model.param_specs(rules, mesh), abstract_params, mesh)
+    in_specs = _batch_specs(cfg, shape, mesh, rules)
+    abstract_batch = input_specs(cfg, shape)
+    from repro.configs.base import padded_vocab
+    Vp = padded_vocab(cfg.vocab_size)
+
+    with mesh:
+        if shape.kind == "train":
+            mb = microbatches if microbatches is not None else \
+                TRAIN_MICROBATCHES.get(arch, 1)
+            step = make_train_step(model, OptConfig(), microbatches=mb)
+            ospecs = opt_specs(pspecs)
+            fn = jax.jit(
+                step,
+                in_shardings=(_sharding(mesh, pspecs), _sharding(mesh, ospecs),
+                              _sharding(mesh, in_specs)),
+                out_shardings=(_sharding(mesh, pspecs),
+                               _sharding(mesh, ospecs), None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(abstract_params,
+                               abstract_opt_state(abstract_params),
+                               abstract_batch)
+        elif shape.kind == "prefill":
+            cache_sp = sanitize_tree(
+                model.cache_specs(shape.global_batch, shape.seq_len, rules,
+                                  mesh),
+                model.abstract_cache(shape.global_batch, shape.seq_len), mesh)
+            logits_sp = sanitize_spec(
+                logical_spec(("batch", "vocab"), rules, mesh),
+                (shape.global_batch, Vp), mesh)
+
+            def prefill(params, batch):
+                return model.prefill(
+                    params, batch["tokens"],
+                    patch_embeds=batch.get("patch_embeds"),
+                    audio_frames=batch.get("audio_frames"))
+
+            fn = jax.jit(
+                prefill,
+                in_shardings=(_sharding(mesh, pspecs), _sharding(mesh, in_specs)),
+                out_shardings=(NamedSharding(mesh, logits_sp),
+                               _sharding(mesh, cache_sp)),
+            )
+            lowered = fn.lower(abstract_params, abstract_batch)
+        else:  # decode
+            S = shape.seq_len
+            abstract_cache = model.abstract_cache(shape.global_batch, S)
+            cache_sp = sanitize_tree(
+                model.cache_specs(shape.global_batch, S, rules, mesh),
+                abstract_cache, mesh)
+            logits_sp = sanitize_spec(
+                logical_spec(("batch", "vocab"), rules, mesh),
+                (shape.global_batch, Vp), mesh)
+            tok_sp = sanitize_spec(logical_spec(("batch", "seq"), rules, mesh),
+                                   (shape.global_batch, 1), mesh)
+
+            def decode(params, tokens, cache):
+                return model.decode_step(params, tokens, cache)
+
+            fn = jax.jit(
+                decode,
+                in_shardings=(_sharding(mesh, pspecs),
+                              NamedSharding(mesh, tok_sp),
+                              _sharding(mesh, cache_sp)),
+                out_shardings=(NamedSharding(mesh, logits_sp),
+                               _sharding(mesh, cache_sp)),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(abstract_params, abstract_batch["tokens"],
+                               abstract_cache)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # per-chip collective bytes, while-trip-count corrected
+    coll = collective_bytes(hlo)
+    counts = coll.pop("_counts")
+    coll_total = sum(coll.values())
+    # per-chip HLO numbers (partitioned module; rolled scans count body once)
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    # analytic primary source (validated vs unrolled compiles; see roofline.py)
+    mb = microbatches if microbatches is not None else \
+        (TRAIN_MICROBATCHES.get(arch, 1) if shape.kind == "train" else 1)
+    ana = analytic_cost(cfg, shape, microbatches=mb,
+                        remat=impl.remat, chips=chips, model=model)
+    terms = roofline_terms(ana["flops_per_chip"], ana["hbm_bytes_per_chip"],
+                           coll_total)
+    mflops = model_flops(cfg, shape, model.active_param_count())
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": list(mesh.devices.shape),
+        "chips": chips, "compile_s": round(compile_s, 2),
+        "microbatches": mb,
+        "flops_per_chip": ana["flops_per_chip"],
+        "flops_global": ana["flops_global"],
+        "hbm_bytes_per_chip": ana["hbm_bytes_per_chip"],
+        "hlo_flops_per_chip": hlo_flops,
+        "hlo_bytes_per_chip": hlo_bytes,
+        "collective_bytes": coll, "collective_counts": counts,
+        "collective_total": coll_total,
+        "model_flops": mflops,
+        "useful_flops_frac": mflops / ana["flops_global"]
+        if ana["flops_global"] else 0.0,
+        "memory": {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "arg_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        **terms,
+    }
+    return record, compiled
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out or os.path.abspath(ARTIFACT_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+
+    archs = ALL_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_tag = "multipod" if multi_pod else "singlepod"
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                if not shape_applicable(cfg, shape_name):
+                    print(f"[skip] {arch} x {shape_name} "
+                          f"(full attention; see DESIGN.md)")
+                    continue
+                tag = f"{mesh_tag}/{arch}__{shape_name}"
+                path = os.path.join(out_dir, mesh_tag)
+                os.makedirs(path, exist_ok=True)
+                fpath = os.path.join(path, f"{arch}__{shape_name}.json")
+                t0 = time.time()
+                try:
+                    rec, compiled = lower_cell(arch, shape_name, mesh,
+                                               microbatches=args.microbatches)
+                    print(f"[ok]   {tag}: compile={rec['compile_s']}s "
+                          f"mem/dev={rec['memory']['bytes_per_device']/2**30:.2f}GiB "
+                          f"compute={rec['compute_s']*1e3:.1f}ms "
+                          f"mem={rec['memory_s']*1e3:.1f}ms "
+                          f"coll={rec['collective_s']*1e3:.1f}ms "
+                          f"dom={rec['dominant']}", flush=True)
+                    with open(fpath, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    del compiled
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag} after {time.time()-t0:.0f}s: {e}",
+                          flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Production training driver.
+
+Runs any assigned arch on any mesh (production 16x16 / 2x16x16 or a local
+host mesh), with: deterministic restart-safe data, periodic async
+checkpoints, crash restore (elastic: restores onto whatever mesh is
+available), gradient-accumulation microbatching, and step-time logging.
+
+Smoke mode (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.lm import LM, ModelImpl
+from repro.sharding.specs import DEFAULT_RULES, logical_spec, sanitize_tree
+from repro.train.optimizer import OptConfig, opt_init, opt_specs
+from repro.train.step import make_train_step
+
+
+def shard_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, PS))
+
+
+def train_loop(arch: str, *, smoke: bool = False, steps: int = 50,
+               batch: int = 8, seq: int = 128, microbatches: int = 1,
+               ckpt_dir: str | None = None, ckpt_interval: int = 20,
+               mesh=None, log_every: int = 10, lr: float = 3e-4,
+               resume: bool = True) -> dict:
+    cfg = get_config(arch, smoke=smoke)
+    model = LM(cfg, impl=ModelImpl())
+    mesh = mesh or make_host_mesh()
+    rules = DEFAULT_RULES
+
+    opt_cfg = OptConfig(lr=lr, warmup_steps=max(steps // 10, 5),
+                        total_steps=steps)
+    step_fn = make_train_step(model, opt_cfg, microbatches=microbatches)
+
+    abstract_params = model.abstract_params()
+    pspecs = sanitize_tree(model.param_specs(rules, mesh), abstract_params,
+                           mesh)
+    ospecs = opt_specs(pspecs)
+    data_spec = logical_spec(("batch", "seq"), rules, mesh)
+
+    ds = SyntheticLMDataset(cfg.vocab_size, seq, batch, seed=0)
+    mgr = CheckpointManager(ckpt_dir, interval=ckpt_interval) if ckpt_dir \
+        else None
+
+    with mesh:
+        params = jax.jit(
+            model.init, out_shardings=shard_tree(mesh, pspecs)
+        )(jax.random.PRNGKey(0))
+        opt_state = jax.jit(
+            opt_init, out_shardings=shard_tree(mesh, ospecs))(params)
+        start_step = 0
+        if mgr is not None and resume:
+            restored, at = mgr.restore(
+                {"params": params, "opt": opt_state},
+                mesh, {"params": pspecs, "opt": ospecs})
+            if restored is not None:
+                params, opt_state = restored["params"], restored["opt"]
+                start_step = int(at)
+                print(f"[train] restored checkpoint at step {start_step}")
+
+        jit_step = jax.jit(
+            step_fn,
+            in_shardings=(shard_tree(mesh, pspecs), shard_tree(mesh, ospecs),
+                          NamedSharding(mesh, data_spec)),
+            out_shardings=(shard_tree(mesh, pspecs),
+                           shard_tree(mesh, ospecs), None),
+            donate_argnums=(0, 1))
+
+        losses = []
+        t0 = time.time()
+        for step in range(start_step, steps):
+            hbatch = ds.batch_at(step)
+            dbatch = {k: jax.device_put(v, NamedSharding(mesh, data_spec))
+                      for k, v in hbatch.items()}
+            params, opt_state, metrics = jit_step(params, opt_state, dbatch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if mgr is not None:
+                mgr.maybe_save(step + 1, {"params": params, "opt": opt_state})
+            if log_every and (step + 1) % log_every == 0:
+                dt = (time.time() - t0) / max(step + 1 - start_step, 1)
+                print(f"[train] step {step + 1}/{steps} loss={loss:.4f} "
+                      f"gnorm={float(metrics['gnorm']):.3f} "
+                      f"{dt * 1e3:.0f} ms/step", flush=True)
+        if mgr is not None:
+            mgr.wait()
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "params": params}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 mesh (requires 256 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    mesh = None
+    if args.production_mesh or args.multi_pod:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    out = train_loop(args.arch, smoke=args.smoke, steps=args.steps,
+                     batch=args.batch, seq=args.seq,
+                     microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+                     ckpt_interval=args.ckpt_interval, mesh=mesh, lr=args.lr)
+    print(f"[train] done; final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""GQA attention with RoPE, causal / sliding-window masks, cross-attention,
+and KV-cache support.  Default impl is einsum (XLA) — used for dry-runs and
+CPU tests; `impl="flash"` switches to the Pallas flash kernel on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, apply_rope
+from repro.sharding.specs import AxisRules, with_logical_constraint
+
+
+def attn_schema(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    dt = cfg.dtype
+    sch = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = ParamSpec((H, hd), ("heads", "head_dim"), dt, "zeros")
+        sch["bk"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), dt, "zeros")
+        sch["bv"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), dt, "zeros")
+    return sch
+
+
+def _project_qkv(p: dict, x: jax.Array, x_kv: jax.Array, cfg: ModelConfig,
+                 rules: AxisRules | None):
+    q = jnp.einsum("bld,dhk->bhlk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->bhlk", x_kv, p["wk"])
+    v = jnp.einsum("bld,dhk->bhlk", x_kv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    q = with_logical_constraint(q, ("batch", "heads", "seq", "head_dim"), rules)
+    return q, k, v
+
+
+def _sdpa_full(q: jax.Array, k: jax.Array, v: jax.Array,
+               mask: jax.Array | None,
+               rules: AxisRules | None = None) -> jax.Array:
+    """Full-sequence attention. q: (B,H,Lq,hd); k,v: (B,KV,Lk,hd).
+
+    KV heads are broadcast (repeated) to H so every tensor — including the
+    (B,H,Lq,Lk) score matrix — stays sharded on heads->model.  The grouped
+    (B,KV,G,Lq,Lk) form leaves scores replicated over heads when KV doesn't
+    divide the model axis, which blows per-device temp memory at seq 4k+.
+    """
+    B, H, Lq, hd = q.shape
+    KV = k.shape[1]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=1)
+        v = jnp.repeat(v, H // KV, axis=1)
+    k = with_logical_constraint(k, ("batch", "heads", "seq", "head_dim"), rules)
+    v = with_logical_constraint(v, ("batch", "heads", "seq", "head_dim"), rules)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = with_logical_constraint(logits, ("batch", "heads", None, None),
+                                     rules)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                  window: int, block_q: int = 512,
+                  rules: AxisRules | None = None) -> jax.Array:
+    """Flash-style chunked attention on the XLA path: scan over q blocks so
+    only a (B,H,bq,Lk) score slab is ever live — 64x less temp memory than
+    the full (B,H,L,L) matrix at 32k.  Numerically identical to _sdpa_full
+    (per-row softmax computed on the full kv extent of each block)."""
+    B, H, L, hd = q.shape
+    KV = k.shape[1]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=1)
+        v = jnp.repeat(v, H // KV, axis=1)
+    k = with_logical_constraint(k, ("batch", "heads", "seq", "head_dim"), rules)
+    v = with_logical_constraint(v, ("batch", "heads", "seq", "head_dim"), rules)
+    block_q = min(block_q, L)
+    assert L % block_q == 0
+    nq = L // block_q
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos = jnp.arange(k.shape[2])
+
+    def body(_, iq):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, iq * block_q, block_q, axis=2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q_blk.astype(jnp.float32), kf) * scale
+        qpos = iq * block_q + jnp.arange(block_q)
+        m = jnp.ones((block_q, k.shape[2]), bool)
+        if causal:
+            m &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            m &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(m[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(v.dtype)
+        return None, o
+
+    _, blocks = jax.lax.scan(body, None, jnp.arange(nq))
+    # (nq, B, H, bq, hd) -> (B, H, L, hd)
+    return blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, L, hd)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None,
+          kv_logical: str | None = None, rules: AxisRules | None = None) -> jax.Array:
+    """Grouped GQA attention (decode path: Lq=1, scores stay small).
+    q: (B,H,Lq,hd); k,v: (B,KV,Lk,hd); mask broadcastable to (B,KV,G,Lq,Lk)."""
+    B, H, Lq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Lq, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgqh,bkth->bkgqt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,bkth->bkgqh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, Lq, hd).astype(v.dtype)
+
+
+def causal_mask(Lq: int, Lk: int, window: int = 0, offset: int = 0) -> jax.Array:
+    """(1,1,1,Lq,Lk) boolean; offset = absolute position of query 0."""
+    qpos = jnp.arange(Lq)[:, None] + offset
+    kpos = jnp.arange(Lk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None, None, None]
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array | None = None,
+    causal: bool = True,
+    window: int = 0,
+    x_kv: jax.Array | None = None,       # cross-attention source
+    use_rope: bool = True,
+    rules: AxisRules | None = None,
+    impl: str = "xla",
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill). x: (B, L, d)."""
+    B, L, _ = x.shape
+    x_kv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(p, x, x_kv, cfg, rules)
+    if use_rope and x_kv is x:
+        pos = positions if positions is not None else jnp.arange(L)
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_pct)
+        k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_pct)
+    if impl == "flash" and causal and x_kv is x:
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(q, k, v, causal=True, window=window)
+    elif x_kv is x and (impl == "xla_chunked"
+                        or (impl == "xla" and L >= 8192 and L % 512 == 0)):
+        # long sequences: chunked q-block attention (see _sdpa_chunked)
+        out = _sdpa_chunked(q, k, v, causal=causal, window=window, rules=rules)
+    else:
+        mask = causal_mask(L, k.shape[2], window) if (causal and x_kv is x) else None
+        if mask is not None:
+            mask = mask[:, :, 0]   # (1,1,Lq,Lk) for the full (repeat) form
+        out = _sdpa_full(q, k, v, mask, rules=rules)
+    out = jnp.einsum("bhlk,hkd->bld", out, p["wo"])
+    out = with_logical_constraint(out, ("batch", "seq", "embed_act"), rules)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_decode(p: dict, x: jax.Array, xk: jax.Array, xv: jax.Array,
+                 cfg: ModelConfig, rules: AxisRules | None = None) -> jax.Array:
+    """Decode-time cross-attention over a precomputed (frames) KV cache."""
+    q = jnp.einsum("bld,dhk->bhlk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"][None, :, None, :]
+    out = _sdpa(q, xk, xv, None, rules=rules)
+    out = jnp.einsum("bhlk,hkd->bld", out, p["wo"])
+    return with_logical_constraint(out, ("batch", "seq", "embed_act"), rules)
+
+
+# ------------------------------------------------------------ decode (cached) ---
+
+
+def decode_attention(
+    p: dict,
+    x: jax.Array,                 # (B, 1, d)
+    cache_k: jax.Array,           # (B, KV, S, hd)
+    cache_v: jax.Array,
+    cache_len: jax.Array,         # scalar int32: tokens already in cache
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+    use_rope: bool = True,
+    rules: AxisRules | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: returns (out (B,1,d), new_k, new_v)."""
+    B, _, _ = x.shape
+    S = cache_k.shape[2]
+    q, k, v = _project_qkv(p, x, x, cfg, rules)
+    if use_rope:
+        pos = jnp.asarray(cache_len)[None]
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_pct)
+        k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_pct)
+    # ring-buffer write for SWA, append otherwise
+    slot = jnp.mod(cache_len, S) if window > 0 else jnp.minimum(cache_len, S - 1)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                                  slot, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                                  slot, axis=2)
+    kpos = jnp.arange(S)
+    if window > 0:
+        valid = (kpos < jnp.minimum(cache_len + 1, S))
+    else:
+        valid = kpos <= jnp.minimum(cache_len, S - 1)
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(q, cache_k, cache_v, mask, rules=rules)
+    out = jnp.einsum("bhlk,hkd->bld", out, p["wo"])
+    return (with_logical_constraint(out, ("batch", "seq", "embed_act"), rules),
+            cache_k, cache_v)

@@ -1,0 +1,197 @@
+"""Parameter schema machinery + elementary layers (norms, RoPE, MLP, embeds).
+
+Params are plain nested dicts of arrays.  Every leaf is declared once as a
+`ParamSpec(shape, logical, ...)`; from the schema we derive random inits,
+abstract ShapeDtypeStructs (dry-run), and PartitionSpecs (sharding rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import AxisRules, logical_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"      # normal | zeros | ones
+    scale: float = 1.0        # stddev multiplier (normal: 1/sqrt(fan_in) base)
+
+    def __post_init__(self) -> None:
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_from_schema(key: jax.Array, schema) -> Any:
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(k: jax.Array, s: ParamSpec) -> jax.Array:
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+        std = s.scale / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+
+    return jax.tree.unflatten(treedef, [init_one(k, s) for k, s in zip(keys, leaves)])
+
+
+def abstract_from_schema(schema) -> Any:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), schema,
+                        is_leaf=is_spec)
+
+
+def specs_from_schema(schema, rules: AxisRules | None = None, mesh=None) -> Any:
+    return jax.tree.map(lambda s: logical_spec(s.logical, rules, mesh), schema,
+                        is_leaf=is_spec)
+
+
+def stack_schema(schema, n: int) -> Any:
+    """Prepend a stacked-layers dim (for scan-over-layers parameter stacking)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical, s.dtype,
+                            s.init, s.scale),
+        schema, is_leaf=is_spec)
+
+
+def param_count(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+# ------------------------------------------------------------------- layers -----
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_schema(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), (None,), jnp.float32, "ones")}
+    return {"scale": ParamSpec((d,), (None,), jnp.float32, "ones"),
+            "bias": ParamSpec((d,), (None,), jnp.float32, "zeros")}
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # squared ReLU (nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# --- RoPE -------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, rope_pct: float = 1.0) -> jax.Array:
+    rot = int(head_dim * rope_pct) // 2 * 2
+    exponents = jnp.arange(0, rot, 2, dtype=jnp.float32) / max(rot, 1)
+    return 1.0 / (theta ** exponents)            # (rot/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rope_pct: float = 1.0) -> jax.Array:
+    """x: (..., seq, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta, rope_pct)
+    rot = freqs.shape[0] * 2
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, rot/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(*x.shape[:-1], rot)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# --- MLP ----------------------------------------------------------------------
+
+
+def mlp_schema(d_model: int, d_ff: int, activation: str, dtype) -> dict:
+    gated = activation in ("silu", "gelu")
+    sch = {
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "ffn"), dtype),
+        "w_down": ParamSpec((d_ff, d_model), ("ffn", "embed"), dtype),
+    }
+    if gated:
+        sch["w_gate"] = ParamSpec((d_model, d_ff), ("embed", "ffn"), dtype)
+    return sch
+
+
+def mlp_apply(p: dict, x: jax.Array, activation: str) -> jax.Array:
+    act = activation_fn(activation)
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        up = up * act(x @ p["w_gate"])
+    else:
+        up = act(up)
+    return up @ p["w_down"]
+
+
+# --- Embedding ------------------------------------------------------------------
+
+
+def embed_schema(vocab: int, d_model: int, dtype) -> dict:
+    # NOTE: the table's embed dim deliberately has its own logical axis
+    # ("embed_table" -> None): FSDP-sharding it over `data` makes the token
+    # gather reshard through an involuntary full replication in GSPMD.
+    # vocab stays on `model` (TP); the gather lowers to mask+psum.
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed_table"),
+                               dtype, scale=1.0)}
+
+
+def embed_apply(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_apply(table: jax.Array, h: jax.Array,
+                  real_vocab: int | None = None) -> jax.Array:
+    """h: (..., d); table: (padded_vocab, d) -> logits in fp32; columns past
+    `real_vocab` are masked to -inf (vocab padding, see configs.base)."""
+    logits = jnp.einsum("...d,vd->...v", h.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    V = table.shape[0]
+    if real_vocab is not None and real_vocab < V:
+        mask = jnp.arange(V) < real_vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits

@@ -1,0 +1,527 @@
+"""Model assembly for all assigned families.
+
+- dense / moe / vlm : decoder-only transformer (GQA, optional SWA, MoE FFN)
+- ssm               : Mamba2 stack (no FFN)
+- hybrid            : Jamba superblocks (7 mamba + 1 attn per 8 layers,
+                      MoE on odd layers), scanned over superblocks
+- audio             : whisper-style encoder-decoder (frontends are stubs)
+
+Layers are scanned with stacked params (compile time O(1) in depth) and
+rematerialized.  Every apply mode is supported: `forward` (train),
+`prefill` (forward + cache out), `decode_step` (1 token, cache in/out).
+
+Positional encoding is RoPE everywhere; whisper's learned/sinusoidal
+embeddings are replaced by RoPE (documented deviation — keeps the synthetic
+32k decode shapes well-defined).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (ParamSpec, abstract_from_schema, apply_norm,
+                                 embed_apply, embed_schema, init_from_schema,
+                                 is_spec, mlp_apply, mlp_schema, norm_schema,
+                                 param_count, specs_from_schema, stack_schema,
+                                 unembed_apply)
+from repro.sharding.specs import AxisRules, with_logical_constraint
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelImpl:
+    attn: str = "xla"        # xla | flash
+    ssd: str = "xla"         # xla | pallas
+    moe: str = "xla"         # xla | fused
+    remat: bool = True
+    remat_policy: str = "full"   # full | dots | none
+    loss_chunk: int = 0      # 0 = unchunked cross-entropy
+    scan_unroll: bool = False  # unroll layer scans (accounting mode: makes
+    #                            cost_analysis count every layer's flops)
+
+
+def _remat(fn, impl: ModelImpl):
+    if not impl.remat or impl.remat_policy == "none":
+        return fn
+    if impl.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+# ================================================================== blocks ======
+
+def _scan(impl: ModelImpl, body, init, xs):
+    return jax.lax.scan(body, init, xs,
+                        unroll=True if impl.scan_unroll else 1)
+
+
+
+
+class Block:
+    """One transformer layer: mixer (attn | mamba | cross) + optional FFN."""
+
+    def __init__(self, cfg: ModelConfig, impl: ModelImpl, *, mixer: str,
+                 ffn: str, causal: bool = True, cross: bool = False,
+                 rules: AxisRules | None = None):
+        self.cfg, self.impl, self.rules = cfg, impl, rules
+        self.mixer, self.ffn, self.causal, self.cross = mixer, ffn, causal, cross
+
+    # ----------------------------------------------------------- schema -----
+    def schema(self) -> dict:
+        cfg = self.cfg
+        sch: dict[str, Any] = {"norm1": norm_schema(cfg.d_model, cfg.norm)}
+        if self.mixer == "attn":
+            sch["attn"] = attn_mod.attn_schema(cfg)
+        else:
+            sch["mamba"] = mamba_mod.mamba_schema(cfg)
+        if self.cross:
+            sch["norm_x"] = norm_schema(cfg.d_model, cfg.norm)
+            sch["cross"] = attn_mod.attn_schema(cfg)
+        if self.ffn != "none":
+            sch["norm2"] = norm_schema(cfg.d_model, cfg.norm)
+            sch["ffn"] = (moe_mod.moe_schema(cfg) if self.ffn == "moe"
+                          else mlp_schema(cfg.d_model, cfg.d_ff,
+                                          cfg.activation, cfg.dtype))
+        return sch
+
+    def cache_schema(self, B: int, S: int) -> dict:
+        cfg = self.cfg
+        out: dict[str, Any] = {}
+        if self.mixer == "attn":
+            KV, hd = cfg.num_kv_heads, cfg.head_dim_
+            Sw = min(S, cfg.window) if cfg.window > 0 else S
+            # shard KV heads over `model` only when they tile it (PRODUCTION_TP);
+            # otherwise give the axis to the cache length (kv_seq) so decode
+            # caches of GQA models still shard 512 ways
+            from repro.sharding.specs import PRODUCTION_TP
+            kvh = "kv_heads" if KV % PRODUCTION_TP == 0 else None
+            kv = ("batch", kvh, "kv_seq", "head_dim")
+            out["k"] = ParamSpec((B, KV, Sw, hd), kv, cfg.dtype, "zeros")
+            out["v"] = ParamSpec((B, KV, Sw, hd), kv, cfg.dtype, "zeros")
+        else:
+            dims = mamba_mod.mamba_dims(cfg)
+            out["conv"] = ParamSpec((B, cfg.ssm_conv - 1, dims["conv_dim"]),
+                                    ("batch", None, "ssm_inner"), cfg.dtype,
+                                    "zeros")
+            out["ssm"] = ParamSpec((B, dims["H"], dims["P"], dims["N"]),
+                                   ("batch", "ssm_inner", None, "ssm_state"),
+                                   jnp.float32, "zeros")
+        if self.cross:
+            KV, hd = cfg.num_kv_heads, cfg.head_dim_
+            kv = ("batch", "kv_heads", "frames", "head_dim")
+            F = cfg.encoder_frames
+            out["xk"] = ParamSpec((B, KV, F, hd), kv, cfg.dtype, "zeros")
+            out["xv"] = ParamSpec((B, KV, F, hd), kv, cfg.dtype, "zeros")
+        return out
+
+    # ------------------------------------------------------------- apply ----
+    def _ffn_apply(self, p: dict, h: jax.Array) -> tuple[jax.Array, jax.Array]:
+        cfg, aux = self.cfg, jnp.zeros((), jnp.float32)
+        if self.ffn == "none":
+            return h, aux
+        hn = apply_norm(p["norm2"], h, cfg.norm)
+        if self.ffn == "moe":
+            logits = hn.astype(jnp.float32) @ p["ffn"]["router"]
+            _, experts = moe_mod.router_topk(logits, cfg.experts_per_token)
+            aux = moe_mod.moe_aux_loss(logits, experts, cfg.num_experts)
+            out = moe_mod.moe_apply(p["ffn"], hn, cfg, self.rules, self.impl.moe)
+        else:
+            out = mlp_apply(p["ffn"], hn, cfg.activation)
+        return h + out, aux
+
+    def full(self, p: dict, h: jax.Array, *, enc: jax.Array | None = None,
+             positions: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+        """Full-sequence apply (train). Returns (h, moe_aux)."""
+        cfg = self.cfg
+        hn = apply_norm(p["norm1"], h, cfg.norm)
+        if self.mixer == "attn":
+            mix = attn_mod.attention(p["attn"], hn, cfg, causal=self.causal,
+                                     window=cfg.window, positions=positions,
+                                     rules=self.rules, impl=self.impl.attn)
+        else:
+            mix = mamba_mod.mamba_forward(p["mamba"], hn, cfg, self.rules,
+                                          self.impl.ssd)
+        h = h + mix
+        if self.cross:
+            hx = apply_norm(p["norm_x"], h, cfg.norm)
+            h = h + attn_mod.attention(p["cross"], hx, cfg, causal=False,
+                                       x_kv=enc, use_rope=False,
+                                       rules=self.rules, impl="xla")
+        return self._ffn_apply(p, h)
+
+    def prefill(self, p: dict, h: jax.Array, *, enc: jax.Array | None = None,
+                pad_to: int = 0) -> tuple[jax.Array, dict]:
+        """Full-sequence apply that also emits this layer's decode cache.
+        pad_to: allocate this many cache slots (> L leaves room to decode)."""
+        cfg = self.cfg
+        B, L, _ = h.shape
+        cache: dict[str, jax.Array] = {}
+        hn = apply_norm(p["norm1"], h, cfg.norm)
+        if self.mixer == "attn":
+            mix, (ks, vs) = attn_mod.attention(
+                p["attn"], hn, cfg, causal=self.causal, window=cfg.window,
+                rules=self.rules, impl=self.impl.attn, return_kv=True)
+            S_tot = max(pad_to, L)
+            S = min(S_tot, cfg.window) if cfg.window > 0 else S_tot
+            if cfg.window > 0 and L >= S:
+                idx = jnp.arange(L - S, L) % S
+                ring_k = jnp.zeros(ks.shape[:2] + (S,) + ks.shape[3:],
+                                   ks.dtype).at[:, :, idx].set(ks[:, :, L - S:])
+                ring_v = jnp.zeros_like(ring_k).at[:, :, idx].set(
+                    vs[:, :, L - S:])
+                cache["k"], cache["v"] = ring_k, ring_v
+            elif cfg.window > 0:  # L < window: place at slots (pos % S)
+                idx = jnp.arange(L) % S
+                ring_k = jnp.zeros(ks.shape[:2] + (S,) + ks.shape[3:],
+                                   ks.dtype).at[:, :, idx].set(ks)
+                ring_v = jnp.zeros_like(ring_k).at[:, :, idx].set(vs)
+                cache["k"], cache["v"] = ring_k, ring_v
+            else:
+                pad = S_tot - L
+                cache["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                cache["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            h = h + mix
+        else:
+            mix, (conv_tail, S_state) = mamba_mod.mamba_forward(
+                p["mamba"], hn, cfg, self.rules, self.impl.ssd,
+                return_state=True)
+            cache["conv"], cache["ssm"] = conv_tail, S_state
+            h = h + mix
+        if self.cross:
+            hx = apply_norm(p["norm_x"], h, cfg.norm)
+            mix, (xk, xv) = attn_mod.attention(
+                p["cross"], hx, cfg, causal=False, x_kv=enc, use_rope=False,
+                rules=self.rules, return_kv=True)
+            cache["xk"], cache["xv"] = xk, xv
+            h = h + mix
+        h, _ = self._ffn_apply(p, h)
+        return h, cache
+
+    def decode(self, p: dict, h: jax.Array, cache: dict, cache_len: jax.Array
+               ) -> tuple[jax.Array, dict]:
+        """One-token apply. h: (B, 1, d)."""
+        cfg = self.cfg
+        new_cache = dict(cache)
+        hn = apply_norm(p["norm1"], h, cfg.norm)
+        if self.mixer == "attn":
+            mix, k2, v2 = attn_mod.decode_attention(
+                p["attn"], hn, cache["k"], cache["v"], cache_len, cfg,
+                window=cfg.window, rules=self.rules)
+            new_cache["k"], new_cache["v"] = k2, v2
+        else:
+            mix, conv2, ssm2 = mamba_mod.mamba_decode_step(
+                p["mamba"], hn, cache["conv"], cache["ssm"], cfg, self.rules)
+            new_cache["conv"], new_cache["ssm"] = conv2, ssm2
+        h = h + mix
+        if self.cross:
+            hx = apply_norm(p["norm_x"], h, cfg.norm)
+            out = attn_mod.cross_decode(p["cross"], hx, cache["xk"],
+                                        cache["xv"], cfg, rules=self.rules)
+            h = h + out
+        h, _ = self._ffn_apply(p, h)
+        return h, new_cache
+
+
+# =================================================================== model ======
+
+
+def _hybrid_layout(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """(mixer, ffn) per layer inside one hybrid superblock."""
+    period = cfg.attn_period
+    out = []
+    for j in range(period):
+        mixer = "attn" if j == cfg.attn_offset else "mamba"
+        ffn = "moe" if (cfg.moe_period and j % cfg.moe_period == 1) else "mlp"
+        out.append((mixer, ffn))
+    return out
+
+
+class LM:
+    """Decoder LM / enc-dec wrapper over scanned Block stacks."""
+
+    def __init__(self, cfg: ModelConfig, impl: ModelImpl | None = None,
+                 rules: AxisRules | None = None):
+        self.cfg = cfg
+        self.impl = impl or ModelImpl()
+        self.rules = rules
+        fam = cfg.family
+        mk = functools.partial(Block, cfg, self.impl, rules=rules)
+        if fam in ("dense", "vlm"):
+            self.blocks = [mk(mixer="attn", ffn="mlp")]
+            self.n_stack = cfg.num_layers
+        elif fam == "moe":
+            self.blocks = [mk(mixer="attn", ffn="moe")]
+            self.n_stack = cfg.num_layers
+        elif fam == "ssm":
+            self.blocks = [mk(mixer="mamba", ffn="none")]
+            self.n_stack = cfg.num_layers
+        elif fam == "hybrid":
+            assert cfg.num_layers % cfg.attn_period == 0
+            self.blocks = [mk(mixer=m, ffn=f) for m, f in _hybrid_layout(cfg)]
+            self.n_stack = cfg.num_layers // cfg.attn_period
+        elif fam == "audio":
+            self.enc_block = mk(mixer="attn", ffn="mlp", causal=False)
+            self.blocks = [mk(mixer="attn", ffn="mlp", cross=True)]
+            self.n_stack = cfg.num_layers
+        else:
+            raise ValueError(fam)
+
+    # ---------------------------------------------------------- schema ------
+    def schema(self) -> dict:
+        cfg = self.cfg
+        if len(self.blocks) == 1:
+            blocks = stack_schema(self.blocks[0].schema(), self.n_stack)
+        else:  # hybrid superblock: dict of distinct layers, stacked
+            sup = {f"l{j}": b.schema() for j, b in enumerate(self.blocks)}
+            blocks = stack_schema(sup, self.n_stack)
+        from repro.configs.base import padded_vocab
+        Vp = padded_vocab(cfg.vocab_size)
+        sch: dict[str, Any] = {
+            "embed": embed_schema(Vp, cfg.d_model, cfg.dtype),
+            "blocks": blocks,
+            "final_norm": norm_schema(cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            sch["unembed"] = ParamSpec((Vp, cfg.d_model),
+                                       ("vocab", "embed_table"), cfg.dtype)
+        if cfg.family == "audio":
+            sch["encoder"] = {
+                "blocks": stack_schema(self.enc_block.schema(),
+                                       cfg.encoder_layers),
+                "final_norm": norm_schema(cfg.d_model, cfg.norm),
+            }
+        return sch
+
+    def init(self, key: jax.Array):
+        return init_from_schema(key, self.schema())
+
+    def abstract_params(self):
+        return abstract_from_schema(self.schema())
+
+    def param_specs(self, rules: AxisRules | None = None, mesh=None):
+        return specs_from_schema(self.schema(), rules or self.rules, mesh)
+
+    def param_count(self) -> int:
+        return param_count(self.schema())
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if cfg.num_experts and cfg.experts_per_token:
+            F = cfg.moe_d_ff or cfg.d_ff
+            per_expert = 3 * cfg.d_model * F
+            n_moe = self._num_moe_layers()
+            inactive = n_moe * (cfg.num_experts - cfg.experts_per_token) * per_expert
+            return total - inactive
+        return total
+
+    def _num_moe_layers(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "moe":
+            return cfg.num_layers
+        if cfg.family == "hybrid":
+            return sum(f == "moe" for _, f in _hybrid_layout(cfg)) * self.n_stack
+        return 0
+
+    # --------------------------------------------------------- embedding ----
+    def _embed_in(self, params, tokens, patch_embeds=None, audio=False):
+        h = embed_apply(params["embed"], tokens).astype(self.cfg.dtype)
+        if self.cfg.family == "vlm" and patch_embeds is not None:
+            h = jnp.concatenate([patch_embeds.astype(h.dtype), h], axis=1)
+        return with_logical_constraint(h, ("batch", "seq", "embed_act"),
+                                       self.rules)
+
+    def _unembed(self, params, h):
+        table = params.get("unembed", params["embed"]["table"])
+        logits = unembed_apply(table, h, self.cfg.vocab_size)
+        return with_logical_constraint(logits, ("batch", "seq", "vocab"),
+                                       self.rules)
+
+    # ----------------------------------------------------------- encoder ----
+    def _encode(self, params, audio_frames):
+        h = audio_frames.astype(self.cfg.dtype)
+        blk = self.enc_block
+
+        def body(carry, p):
+            out, _ = blk.full(p, carry)
+            return out, None
+
+        h, _ = _scan(self.impl, _remat(body, self.impl), h, params["encoder"]["blocks"])
+        return apply_norm(params["encoder"]["final_norm"], h, self.cfg.norm)
+
+    # ------------------------------------------------------------ forward ---
+    def hidden_states(self, params, tokens, *, patch_embeds=None,
+                      audio_frames=None) -> tuple[jax.Array, jax.Array]:
+        """Returns (h_final (B, L, d), total moe aux loss)."""
+        cfg = self.cfg
+        enc = self._encode(params, audio_frames) if cfg.family == "audio" else None
+        h = self._embed_in(params, tokens, patch_embeds)
+
+        if len(self.blocks) == 1:
+            blk = self.blocks[0]
+
+            def body(carry, p):
+                out, aux = blk.full(p, carry, enc=enc)
+                return out, aux
+
+            h, auxs = _scan(self.impl, _remat(body, self.impl), h, params["blocks"])
+            aux = jnp.sum(auxs)
+        else:
+            blocks = self.blocks
+
+            def body(carry, p):
+                out, aux = carry, jnp.zeros((), jnp.float32)
+                for j, b in enumerate(blocks):
+                    out, a = b.full(p[f"l{j}"], out)
+                    aux = aux + a
+                return out, aux
+
+            h, auxs = _scan(self.impl, _remat(body, self.impl), h, params["blocks"])
+            aux = jnp.sum(auxs)
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        return h, aux
+
+    def forward(self, params, tokens, *, patch_embeds=None, audio_frames=None
+                ) -> jax.Array:
+        """Full logits (B, L_text, vocab); vlm: logits for text positions."""
+        h, _ = self.hidden_states(params, tokens, patch_embeds=patch_embeds,
+                                  audio_frames=audio_frames)
+        if self.cfg.family == "vlm" and patch_embeds is not None:
+            h = h[:, patch_embeds.shape[1]:, :]
+        return self._unembed(params, h)
+
+    def loss(self, params, batch: dict) -> jax.Array:
+        """Next-token cross-entropy (+ MoE aux).  labels = targets per pos."""
+        cfg = self.cfg
+        h, aux = self.hidden_states(
+            params, batch["tokens"], patch_embeds=batch.get("patch_embeds"),
+            audio_frames=batch.get("audio_frames"))
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            h = h[:, batch["patch_embeds"].shape[1]:, :]
+        labels = batch["labels"]
+        table = params.get("unembed", params["embed"]["table"])
+
+        def xent(hc, lc):
+            logits = unembed_apply(table, hc, cfg.vocab_size)
+            logits = with_logical_constraint(logits, ("batch", "seq", "vocab"),
+                                             self.rules)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            return jnp.sum(lse - gold)
+
+        C = self.impl.loss_chunk
+        B, L, _ = h.shape
+        if C and L % C == 0 and L > C:
+            hc = h.reshape(B, L // C, C, -1).swapaxes(0, 1)
+            lc = labels.reshape(B, L // C, C).swapaxes(0, 1)
+
+            def body(tot, inp):
+                return tot + xent(*inp), None
+
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+        else:
+            total = xent(h, labels)
+        ntok = jnp.asarray(labels.size, jnp.float32)
+        return total / ntok + 0.01 * aux
+
+    # ------------------------------------------------------------- caches ---
+    def cache_schema(self, B: int, S: int) -> dict:
+        sch: dict[str, Any] = {"len": ParamSpec((), (), jnp.int32, "zeros")}
+        if len(self.blocks) == 1:
+            sch["blocks"] = stack_schema(self.blocks[0].cache_schema(B, S),
+                                         self.n_stack)
+        else:
+            sup = {f"l{j}": b.cache_schema(B, S)
+                   for j, b in enumerate(self.blocks)}
+            sch["blocks"] = stack_schema(sup, self.n_stack)
+        return sch
+
+    def abstract_cache(self, B: int, S: int):
+        return abstract_from_schema(self.cache_schema(B, S))
+
+    def cache_specs(self, B: int, S: int, rules: AxisRules | None = None,
+                    mesh=None):
+        return specs_from_schema(self.cache_schema(B, S), rules or self.rules,
+                                 mesh)
+
+    def init_cache(self, B: int, S: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_schema(B, S),
+            is_leaf=is_spec)
+
+    # ------------------------------------------------------------ prefill ---
+    def prefill(self, params, tokens, *, patch_embeds=None, audio_frames=None,
+                pad_to: int = 0) -> tuple[jax.Array, dict]:
+        """Returns (last-token logits (B, vocab), cache).  pad_to: total
+        cache slots to allocate (> prompt length leaves decode room)."""
+        cfg = self.cfg
+        enc = self._encode(params, audio_frames) if cfg.family == "audio" else None
+        h = self._embed_in(params, tokens, patch_embeds)
+        L_total = h.shape[1]
+
+        if len(self.blocks) == 1:
+            blk = self.blocks[0]
+
+            def body(carry, p):
+                out, cache = blk.prefill(p, carry, enc=enc, pad_to=pad_to)
+                return out, cache
+
+            h, caches = _scan(self.impl, _remat(body, self.impl), h, params["blocks"])
+        else:
+            blocks = self.blocks
+
+            def body(carry, p):
+                out = carry
+                caches = {}
+                for j, b in enumerate(blocks):
+                    out, c = b.prefill(p[f"l{j}"], out, pad_to=pad_to)
+                    caches[f"l{j}"] = c
+                return out, caches
+
+            h, caches = _scan(self.impl, _remat(body, self.impl), h, params["blocks"])
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        logits = self._unembed(params, h[:, -1:, :])[:, 0, :]
+        cache = {"blocks": caches, "len": jnp.asarray(L_total, jnp.int32)}
+        return logits, cache
+
+    # ------------------------------------------------------------- decode ---
+    def decode_step(self, params, tokens, cache) -> tuple[jax.Array, dict]:
+        """tokens: (B, 1) -> (logits (B, vocab), new cache)."""
+        cfg = self.cfg
+        h = self._embed_in(params, tokens)
+        cache_len = cache["len"]
+
+        if len(self.blocks) == 1:
+            blk = self.blocks[0]
+
+            def body(carry, inp):
+                p, c = inp
+                out, c2 = blk.decode(p, carry, c, cache_len)
+                return out, c2
+
+            h, new_caches = _scan(self.impl, body, h, (params["blocks"], cache["blocks"]))
+        else:
+            blocks = self.blocks
+
+            def body(carry, inp):
+                p, c = inp
+                out = carry
+                c2 = {}
+                for j, b in enumerate(blocks):
+                    out, cj = b.decode(p[f"l{j}"], out, c[f"l{j}"], cache_len)
+                    c2[f"l{j}"] = cj
+                return out, c2
+
+            h, new_caches = _scan(self.impl, body, h, (params["blocks"], cache["blocks"]))
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        logits = self._unembed(params, h)[:, 0, :]
+        return logits, {"blocks": new_caches, "len": cache_len + 1}

@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality) mixer block.
+
+Chunked SSD forward for train/prefill (quadratic within chunks, linear state
+carry across chunks, `lax.scan` over chunks) and an O(1)-state decode step.
+The inner/head dim is sharded over `model` (tensor parallelism); B/C are
+single-group (G=1), shared across heads, per the Mamba2 default.
+
+Jamba's mamba layers reuse this block with their own (smaller) state size —
+Jamba ships Mamba-1; we adapt it to the SSD formulation (TPU-friendly:
+chunk-level matmuls hit the MXU instead of a length-L sequential scan), noted
+in DESIGN.md as a hardware adaptation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, rmsnorm
+from repro.sharding.specs import AxisRules, with_logical_constraint
+
+
+def mamba_dims(cfg: ModelConfig) -> dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N          # x, B, C share the causal conv (G=1)
+    return dict(d_inner=d_inner, H=H, P=cfg.ssm_head_dim, N=N, conv_dim=conv_dim)
+
+
+def mamba_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dims = mamba_dims(cfg)
+    di, H, N, cd = dims["d_inner"], dims["H"], dims["N"], dims["conv_dim"]
+    dt = cfg.dtype
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * N + H), ("embed", "ssm_inner"), dt),
+        "conv_w": ParamSpec((cd, cfg.ssm_conv), ("ssm_inner", "conv"), dt,
+                            scale=0.5),
+        "conv_b": ParamSpec((cd,), ("ssm_inner",), dt, "zeros"),
+        "A_log": ParamSpec((H,), ("ssm_inner",), jnp.float32, "ones"),
+        "D": ParamSpec((H,), ("ssm_inner",), jnp.float32, "ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_inner",), jnp.float32, "zeros"),
+        "norm_scale": ParamSpec((di,), ("ssm_inner",), jnp.float32, "ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), dt),
+    }
+
+
+def _split_proj(p: dict, x: jax.Array, cfg: ModelConfig):
+    dims = mamba_dims(cfg)
+    di, H, N = dims["d_inner"], dims["H"], dims["N"]
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over seq. xBC: (B, L, C); w: (C, K)."""
+    K = w.shape[1]
+    if state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = state                                  # (B, K-1, C)
+    xp = jnp.concatenate([pad, xBC], axis=1)         # (B, L+K-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1], :] * w[:, i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, A: jax.Array, Bs: jax.Array,
+                Cs: jax.Array, chunk: int,
+                init_state: jax.Array | None = None,
+                impl: str = "xla") -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: (B, L, H, P) head inputs; dt: (B, L, H) step sizes (post-softplus);
+    A: (H,) negative decay rates; Bs/Cs: (B, L, N) single-group state in/out.
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    if impl == "pallas":
+        from repro.kernels.ops import ssd_scan
+        return ssd_scan(xh, dt, A, Bs, Cs, chunk=chunk, init_state=init_state)
+
+    B, L, H, P = xh.shape
+    N = Bs.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    xc = xh.reshape(B, nc, Q, H, P)
+    dtc = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    Bc = Bs.reshape(B, nc, Q, N)
+    Cc = Cs.reshape(B, nc, Q, N)
+    a = dtc * A[None, None, None, :]                 # (B, nc, Q, H) log-decay
+    cs = jnp.cumsum(a, axis=2)                        # inclusive cumsum
+
+    S0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(S, inp):
+        xq, dtq, Bq, Cq, aq, csq = inp               # per-chunk slices
+        # intra-chunk (quadratic within the chunk)
+        decay = jnp.exp(csq[:, :, None, :] - csq[:, None, :, :])   # (B,Q,Q,H)
+        ii, jj = jnp.meshgrid(jnp.arange(Q), jnp.arange(Q), indexing="ij")
+        tri = (jj <= ii)[None, :, :, None]
+        G = jnp.einsum("bin,bjn->bij", Cq.astype(jnp.float32),
+                       Bq.astype(jnp.float32))        # (B,Q,Q)
+        W = jnp.where(tri, G[..., None] * decay, 0.0) # (B,Q,Q,H)
+        xdt = xq.astype(jnp.float32) * dtq[..., None] # (B,Q,H,P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, xdt)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Cq.astype(jnp.float32), S,
+                             jnp.exp(csq))
+        # state update
+        total = csq[:, -1, :]                         # (B,H)
+        carry_decay = jnp.exp(total[:, None, :] - csq)  # (B,Q,H)
+        dS = jnp.einsum("bjn,bjhp,bjh->bhpn", Bq.astype(jnp.float32), xdt,
+                        carry_decay)
+        S_new = S * jnp.exp(total)[:, :, None, None] + dS
+        return S_new, (y_intra + y_inter)
+
+    inputs = (xc.swapaxes(0, 1), dtc.swapaxes(0, 1), Bc.swapaxes(0, 1),
+              Cc.swapaxes(0, 1), a.swapaxes(0, 1), cs.swapaxes(0, 1))
+    S_final, ys = jax.lax.scan(body, S0, inputs)
+    y = ys.swapaxes(0, 1).reshape(B, L, H, P).astype(xh.dtype)
+    return y, S_final.astype(jnp.float32)
+
+
+def mamba_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                  rules: AxisRules | None = None, impl: str = "xla",
+                  conv_state: jax.Array | None = None,
+                  ssm_state: jax.Array | None = None,
+                  return_state: bool = False):
+    """Full-sequence mamba mixer. x: (B, L, d) -> (B, L, d)."""
+    dims = mamba_dims(cfg)
+    di, H, P, N = dims["d_inner"], dims["H"], dims["P"], dims["N"]
+    B, L, _ = x.shape
+    z, xBC_raw, dt = _split_proj(p, x, cfg)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bs, Cs = xBC[..., :di], xBC[..., di:di + N], xBC[..., di + N:]
+    xh = xs.reshape(B, L, H, P)
+    xh = with_logical_constraint(xh, ("batch", "seq", "ssm_inner", None), rules)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, S = ssd_chunked(xh, dt, A, Bs, Cs, cfg.ssm_chunk, ssm_state, impl)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, L, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_scale"])
+    out = y @ p["out_proj"]
+    out = with_logical_constraint(out, ("batch", "seq", "embed_act"), rules)
+    if return_state:
+        # conv state for prefill->decode handoff: last K-1 *raw* conv inputs
+        K = cfg.ssm_conv
+        pad = jnp.zeros((B, K - 1, dims["conv_dim"]), x.dtype)
+        conv_tail = jnp.concatenate([pad, xBC_raw.astype(x.dtype)],
+                                    axis=1)[:, -(K - 1):, :]
+        return out, (conv_tail, S)
+    return out
+
+
+def mamba_decode_step(p: dict, x: jax.Array, conv_state: jax.Array,
+                      ssm_state: jax.Array, cfg: ModelConfig,
+                      rules: AxisRules | None = None):
+    """One-token decode. x: (B, 1, d); conv_state: (B, K-1, conv_dim);
+    ssm_state: (B, H, P, N).  Returns (out, new_conv_state, new_ssm_state)."""
+    dims = mamba_dims(cfg)
+    di, H, P, N = dims["d_inner"], dims["H"], dims["P"], dims["N"]
+    B = x.shape[0]
+    z, xBC, dt = _split_proj(p, x, cfg)               # xBC: (B, 1, conv_dim)
+    window = jnp.concatenate([conv_state, xBC], axis=1)   # (B, K, conv_dim)
+    conv_out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    xs = conv_out[:, :di]
+    Bs = conv_out[:, di:di + N]
+    Cs = conv_out[:, di + N:]
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0, :]                                 # (B, H)
+    dA = jnp.exp(dt1 * A[None, :])                    # (B, H)
+    dBx = jnp.einsum("bn,bhp,bh->bhpn", Bs.astype(jnp.float32), xh, dt1)
+    S = ssm_state.astype(jnp.float32) * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cs.astype(jnp.float32), S)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_scale"])
+    out = y @ p["out_proj"]
+    return out, window[:, 1:, :], S.astype(ssm_state.dtype)

@@ -1,0 +1,13 @@
+"""Model construction from configs."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models.lm import LM, ModelImpl
+from repro.sharding.specs import AxisRules
+
+
+def build_model(cfg: ModelConfig | str, impl: ModelImpl | None = None,
+                rules: AxisRules | None = None, smoke: bool = False) -> LM:
+    if isinstance(cfg, str):
+        cfg = get_config(cfg, smoke=smoke)
+    return LM(cfg, impl=impl, rules=rules)

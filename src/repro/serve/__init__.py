@@ -1,0 +1,4 @@
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.serve.engine import ServeEngine
+
+__all__ = ["make_decode_step", "make_prefill_step", "ServeEngine"]

@@ -1,0 +1,77 @@
+"""Batched serving engine: continuous batching over a request queue.
+
+Requests (prompt token lists) are grouped into fixed-size decode batches;
+finished sequences are retired and their slots refilled from the queue
+(continuous batching).  Prefill runs per-request (padded to the bucket
+size), decode runs one fused step for the whole batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+from repro.serve.step import make_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: LM, params, *, batch_size: int = 4,
+                 max_len: int = 256, eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.S = max_len
+        self.eos_id = eos_id
+        self._decode = jax.jit(make_decode_step(model))
+        self._forward_prefill = jax.jit(
+            lambda p, toks: model.prefill(p, toks, pad_to=self.S))
+
+    def _prefill_batch(self, reqs: list[Request]):
+        """Left-pad prompts to a common length, prefill, return cache+last tok."""
+        assert len(reqs) == self.B
+        L = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((self.B, L), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, L - len(r.prompt):] = r.prompt     # left-pad with 0
+        logits, cache = self._forward_prefill(self.params, jnp.asarray(toks))
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve all requests to completion; returns them with outputs."""
+        queue = list(requests)
+        done: list[Request] = []
+        while queue:
+            batch = queue[:self.B]
+            queue = queue[self.B:]
+            while len(batch) < self.B:            # pad with a dummy request
+                batch.append(Request(req_id=-1, prompt=[0], max_new_tokens=1))
+            tok, cache = self._prefill_batch(batch)
+            for i, r in enumerate(batch):
+                if r.req_id >= 0:
+                    r.output.append(int(tok[i, 0]))
+            steps = max(r.max_new_tokens for r in batch) - 1
+            for _ in range(max(steps, 0)):
+                tok, _, cache = self._decode(self.params, tok, cache)
+                for i, r in enumerate(batch):
+                    if r.req_id < 0 or r.done:
+                        continue
+                    t = int(tok[i, 0])
+                    if len(r.output) < r.max_new_tokens:
+                        r.output.append(t)
+                    if t == self.eos_id or len(r.output) >= r.max_new_tokens:
+                        r.done = True
+            done.extend(r for r in batch if r.req_id >= 0)
+        return done

@@ -1,0 +1,27 @@
+"""Serving step factories: prefill (full forward + cache build) and decode
+(one token against the cache).  decode_* / long_* dry-run shapes lower these,
+not train_step."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LM
+
+
+def make_prefill_step(model: LM) -> Callable:
+    def prefill_step(params, batch: dict):
+        return model.prefill(params, batch["tokens"],
+                             patch_embeds=batch.get("patch_embeds"),
+                             audio_frames=batch.get("audio_frames"))
+    return prefill_step
+
+
+def make_decode_step(model: LM, *, greedy: bool = True) -> Callable:
+    def decode_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+    return decode_step

@@ -1,0 +1,5 @@
+from repro.sharding.specs import (AxisRules, DEFAULT_RULES, logical_spec,
+                                  spec_tree, with_logical_constraint)
+
+__all__ = ["AxisRules", "DEFAULT_RULES", "logical_spec", "spec_tree",
+           "with_logical_constraint"]

@@ -1,0 +1,152 @@
+"""Logical-axis sharding: named axes on every tensor dim -> PartitionSpec.
+
+The production mesh is `(data, model)` single-pod or `(pod, data, model)`
+multi-pod.  Logical axes map as:
+
+- batch        -> (pod, data)        activation data parallelism
+- embed        -> data               FSDP/ZeRO-3-style parameter + optimizer
+                                     state sharding (gathered per layer)
+- vocab/heads/ffn/experts/ssm_inner
+               -> model              tensor / expert parallelism
+- kv_seq       -> model              decode KV-cache length sharding
+- seq          -> None (or data for sequence parallelism in prefill)
+
+Rules are a plain dict so perf iterations can swap schemes without touching
+model code (`train_step(..., rules=...)`).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as PS
+
+AxisRules = dict[str, object]   # logical axis -> mesh axis | tuple | None
+
+PRODUCTION_TP = 16              # model-axis size of the production meshes
+
+DEFAULT_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",           # FSDP weight shard axis
+    "embed_table": None,       # embedding table embed dim (gather-friendly)
+    "embed_act": None,         # activations' embed dim stays replicated
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",       # sanitized to None when KV % model != 0
+    "head_dim": None,
+    "ffn": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "ssm_inner": "model",      # mamba inner channels (heads)
+    "ssm_state": None,
+    "kv_seq": "model",         # decode-time KV cache length
+    "frames": None,
+    "conv": None,
+}
+
+# Alternative rule sets used by the perf hillclimb (§Perf in EXPERIMENTS.md).
+SEQ_PARALLEL_RULES: AxisRules = dict(DEFAULT_RULES, seq="data", batch=("pod",))
+NO_FSDP_RULES: AxisRules = dict(DEFAULT_RULES, embed=None)
+TP_ONLY_RULES: AxisRules = dict(DEFAULT_RULES, embed=None, batch=("pod", "data"))
+# pure data parallelism over every mesh axis: zero TP activation all-reduces,
+# one grad all-reduce per step; only for models whose params+opt fit per chip
+DP_ONLY_RULES: AxisRules = dict(
+    DEFAULT_RULES, embed=None, vocab=None, heads=None, kv_heads=None,
+    ffn=None, experts=None, ssm_inner=None, kv_seq=None,
+    batch=("pod", "data", "model"))
+
+
+def _mesh_axes(mesh: jax.sharding.Mesh | None) -> set[str]:
+    return set(mesh.axis_names) if mesh is not None else {"pod", "data", "model"}
+
+
+def logical_spec(logical: tuple[str | None, ...], rules: AxisRules | None = None,
+                 mesh: jax.sharding.Mesh | None = None) -> PS:
+    """Map a tuple of logical axis names to a PartitionSpec.
+
+    Mesh axes not present in the mesh (e.g. 'pod' on the single-pod mesh) are
+    dropped, so the same rules serve both meshes.
+    """
+    rules = rules or DEFAULT_RULES
+    present = _mesh_axes(mesh)
+    used: set[str] = set()
+    out: list[object] = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        target = rules.get(name)
+        if target is None:
+            out.append(None)
+            continue
+        if isinstance(target, (tuple, list)):
+            axes = tuple(a for a in target if a in present and a not in used)
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        else:
+            if target in present and target not in used:
+                used.add(target)
+                out.append(target)
+            else:
+                out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return PS(*out)
+
+
+def spec_tree(logical_tree, rules: AxisRules | None = None,
+              mesh: jax.sharding.Mesh | None = None):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda lg: logical_spec(lg, rules, mesh),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, str) or e is None for e in x),
+    )
+
+
+def _axis_sizes(mesh: jax.sharding.Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def sanitize_spec(spec: PS, shape: tuple[int, ...],
+                  mesh: jax.sharding.Mesh) -> PS:
+    """Drop mesh axes whose size doesn't divide the dim (jit in/out shardings
+    require exact divisibility; internal constraints don't)."""
+    sizes = _axis_sizes(mesh)
+    out: list[object] = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+        kept: list[str] = []
+        s = 1
+        for a in axes:
+            if shape[i] % (s * sizes[a]) == 0:
+                kept.append(a)
+                s *= sizes[a]
+            else:
+                break
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    while out and out[-1] is None:
+        out.pop()
+    return PS(*out)
+
+
+def sanitize_tree(spec_tree, abstract_tree, mesh: jax.sharding.Mesh):
+    """Sanitize a PartitionSpec tree against matching ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda s, a: sanitize_spec(s, a.shape, mesh),
+        spec_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, PS))
+
+
+def with_logical_constraint(x: jax.Array, logical: tuple[str | None, ...],
+                            rules: AxisRules | None = None,
+                            mesh: jax.sharding.Mesh | None = None) -> jax.Array:
+    """with_sharding_constraint via logical names; no-op outside a mesh ctx."""
+    try:
+        spec = logical_spec(logical, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

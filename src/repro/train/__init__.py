@@ -1,0 +1,5 @@
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+from repro.train.step import make_eval_step, make_train_step
+
+__all__ = ["OptConfig", "opt_init", "opt_update", "make_train_step",
+           "make_eval_step"]

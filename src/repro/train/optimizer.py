@@ -1,0 +1,106 @@
+"""AdamW with FSDP-friendly state layout.
+
+Memory design for the 235B-on-256-chip case: params live in bf16; Adam
+moments are fp32 and sharded exactly like the params (2D: embed->data,
+tp-axis->model); there is NO separate fp32 master copy — the update is
+computed in fp32 from the bf16 param and cast back (≈12 bytes/param total
+state, fully sharded).  lr schedule: linear warmup + cosine decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def opt_init(params):
+    """Moments in fp32, same tree/sharding as params; step counter scalar."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(abstract_params):
+    zeros = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                         abstract_params)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape,
+                                                             jnp.float32),
+                              abstract_params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_specs(param_specs):
+    """Moments share the params' PartitionSpecs (fully sharded states)."""
+    from jax.sharding import PartitionSpec as PS
+    return {"m": param_specs, "v": param_specs, "step": PS()}
+
+
+def _decay_mask(path: tuple) -> bool:
+    """No weight decay on norms/biases/scalars (1-D leaves)."""
+    leaf_name = str(path[-1]) if path else ""
+    return not any(s in leaf_name for s in ("scale", "bias", "A_log", "D",
+                                            "dt_bias"))
+
+
+def opt_update(params, grads, state, cfg: OptConfig):
+    """One AdamW step. grads: fp32 (or castable). Returns (params, state, stats)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+
+    gflat, _ = jax.tree.flatten(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in gflat))
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]]
+    params_flat, treedef = jax.tree.flatten(params)
+    grads_flat = jax.tree.leaves(grads)
+    m_flat = jax.tree.leaves(state["m"])
+    v_flat = jax.tree.leaves(state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for path, p, g, m, v in zip(paths, params_flat, grads_flat, m_flat, v_flat):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if _decay_mask(path):
+            upd = upd + cfg.weight_decay * pf
+        new_p.append((pf - lr * upd).astype(p.dtype))
+        new_m.append(m2)
+        new_v.append(v2)
+
+    params = jax.tree.unflatten(treedef, new_p)
+    state = {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v), "step": step}
+    return params, state, {"gnorm": gnorm, "lr": lr}

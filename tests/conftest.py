@@ -1,0 +1,35 @@
+"""Shared fixtures.  NOTE: device count stays 1 here (smoke tests / benches
+must see one device); multi-device tests spawn subprocesses with their own
+XLA_FLAGS per the dry-run contract."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_py(code: str, devices: int = 0, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess (optionally with N fake devices)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if devices:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def helios_jobs():
+    from repro.core import generate_trace
+    return generate_trace("helios", 256, seed=0)
+
+
+@pytest.fixture(scope="session")
+def helios_cluster():
+    from repro.core import make_cluster
+    return make_cluster("helios")

@@ -1,0 +1,87 @@
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ClusterState, Job, make_cluster
+
+
+def mk_job(i, gpus, gpu_type="any"):
+    return Job(job_id=i, user=0, submit_time=0.0, runtime=100.0,
+               est_runtime=100.0, num_gpus=gpus, gpu_type=gpu_type)
+
+
+def test_placement_modes():
+    c = ClusterState(make_cluster("helios"))
+    j = mk_job(0, 4)
+    pack = c.find_placement(j, "pack")
+    spread = c.find_placement(j, "spread")
+    assert sum(pack.values()) == 4 and sum(spread.values()) == 4
+
+
+def test_gang_across_nodes():
+    c = ClusterState(make_cluster("helios"))
+    j = mk_job(0, 20)  # > one node (8 GPUs)
+    p = c.find_placement(j, "pack")
+    assert p is not None and sum(p.values()) == 20 and len(p) >= 3
+
+
+def test_type_constraint():
+    c = ClusterState(make_cluster("helios"))
+    j = mk_job(0, 8, gpu_type="V100")
+    p = c.find_placement(j, "pack")
+    assert all(c.gpu_types[i] == "V100" for i in p)
+
+
+def test_fragmentation_bounds():
+    c = ClusterState(make_cluster("helios"))
+    f0 = c.fragmentation()
+    assert 0.0 <= f0 <= 1.0
+    # drain almost everything from one node -> fragmentation changes
+    j = mk_job(0, 7)
+    c.allocate(j, {0: 7})
+    assert 0.0 <= c.fragmentation() <= 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=8), min_size=1,
+                max_size=20), st.randoms(use_true_random=False))
+def test_alloc_release_invariants(sizes, rnd):
+    """No oversubscription ever; full release restores the initial state."""
+    c = ClusterState(make_cluster("helios"))
+    total0 = c.free_gpus.copy()
+    cpus0 = c.free_cpus.copy()
+    mem0 = c.free_mem.copy()
+    live = []
+    for i, g in enumerate(sizes):
+        j = mk_job(i, g)
+        p = c.find_placement(j, "pack" if rnd.random() < 0.5 else "spread")
+        if p is None:
+            continue
+        c.allocate(j, p)
+        live.append((j, p))
+        assert (c.free_gpus >= 0).all()
+        assert (c.free_cpus >= 0).all()
+        assert (c.free_mem >= -1e-6).all()
+    for j, p in live:
+        c.release(j, p)
+    np.testing.assert_array_equal(c.free_gpus, total0)
+    np.testing.assert_array_equal(c.free_cpus, cpus0)
+    np.testing.assert_allclose(c.free_mem, mem0, atol=1e-6)
+
+
+def test_failure_excludes_node():
+    c = ClusterState(make_cluster("helios"))
+    c.fail_node(0)
+    j = mk_job(0, 8)
+    p = c.find_placement(j, "pack")
+    assert p is not None and 0 not in p
+    c.recover_node(0)
+    assert not c.node_down.any()
+
+
+def test_num_ways():
+    c = ClusterState(make_cluster("helios"))
+    assert c.num_ways_to_schedule(mk_job(0, 4)) >= 1
+    big = mk_job(1, 10_000)
+    assert c.num_ways_to_schedule(big) == 0
+    assert not c.can_schedule_now(big)

@@ -1,0 +1,111 @@
+"""Dry-run integration: production-mesh lower+compile for representative
+cells (subprocess with 512 fake devices) + roofline parsing units."""
+import json
+import os
+
+import pytest
+
+from conftest import run_py
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("stablelm-1.6b", "train_4k"),
+    ("mamba2-780m", "long_500k"),
+    ("whisper-tiny", "decode_32k"),
+])
+def test_lower_cell_singlepod(arch, shape):
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+rec, c = lower_cell({arch!r}, {shape!r}, make_production_mesh())
+assert rec["compile_s"] > 0
+assert rec["collective_total"] >= 0
+assert rec["dominant"] in ("compute_s", "memory_s", "collective_s")
+print("cell-ok", rec["dominant"])
+"""
+    out = run_py(code, devices=512, timeout=900)
+    assert "cell-ok" in out
+
+
+def test_multipod_mesh_shards_pod_axis():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+mesh = make_production_mesh(multi_pod=True)
+assert mesh.shape == {"pod": 2, "data": 16, "model": 16}
+rec, c = lower_cell("granite-moe-1b-a400m", "train_4k", mesh, microbatches=2)
+print("multipod-ok", rec["chips"])
+"""
+    out = run_py(code, devices=512, timeout=900)
+    assert "multipod-ok 512" in out
+
+
+def test_collective_parser_units():
+    from repro.launch.roofline import collective_bytes
+    hlo = """
+HloModule test
+%body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ar = f32[128,256] all-reduce(%x), replica_groups={}
+  ROOT %t = (s32[], f32[128,256]) tuple(%i, %ar)
+}
+%cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+  %c = s32[] constant(8)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %ag = f32[128,256] all-gather(%a), dimensions={0}
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+    got = collective_bytes(hlo)
+    unit = 128 * 256 * 4
+    assert got["all-gather"] == unit
+    assert got["all-reduce"] == unit * 8        # x while trip count
+    counts = got["_counts"]
+    assert counts["all-reduce"] == 8
+
+
+def test_roofline_terms():
+    from repro.launch.roofline import roofline_terms
+    t = roofline_terms(197e12, 819e9, 50e9)     # exactly 1s each
+    assert abs(t["compute_s"] - 1) < 1e-9
+    assert abs(t["memory_s"] - 1) < 1e-9
+    assert abs(t["collective_s"] - 1) < 1e-9
+    assert t["roofline_fraction"] == 1.0
+
+
+def test_analytic_cost_sane():
+    from repro.configs import get_config
+    from repro.launch.roofline import analytic_cost, model_flops
+    from repro.models.lm import LM
+    cfg = get_config("yi-6b")
+    model = LM(cfg)
+    ana = analytic_cost(cfg, "train_4k", microbatches=4, chips=256,
+                        model=model)
+    mf = model_flops(cfg, "train_4k", model.active_param_count())
+    # analytic hardware flops within [1x, 3x] of 6ND
+    assert mf <= ana["flops_global"] <= 3 * mf
+
+
+def test_artifacts_exist_for_all_cells():
+    """After the full dry-run, every applicable cell has a JSON artifact."""
+    base = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "artifacts", "dryrun", "singlepod")
+    if not os.path.isdir(base):
+        pytest.skip("full dry-run artifacts not generated yet")
+    from repro.configs import ALL_ARCHS, SHAPES, get_config, shape_applicable
+    missing = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if not shape_applicable(cfg, shape):
+                continue
+            p = os.path.join(base, f"{arch}__{shape}.json")
+            if not os.path.exists(p):
+                missing.append(f"{arch}/{shape}")
+    assert not missing, f"missing dry-run cells: {missing}"

@@ -1,0 +1,85 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ClusterState, Job, choose_allocation, make_cluster
+from repro.core.milp import _greedy_choice
+
+
+def mk(i, gpus, cpus=0, mem=0.0):
+    return Job(job_id=i, user=0, submit_time=0, runtime=100, est_runtime=100,
+               num_gpus=gpus, req_cpus=cpus, req_mem_gb=mem)
+
+
+def test_single_way_short_circuit():
+    c = ClusterState(make_cluster("helios"))
+    j = mk(0, 80)  # needs every GPU -> exactly one way
+    ways = c.candidate_ways(j)
+    res = choose_allocation(c, j, ways)
+    assert res.placement in ways and not res.used_solver
+
+
+def test_solver_picks_feasible_way():
+    c = ClusterState(make_cluster("helios"))
+    j = mk(0, 4)
+    ways = c.candidate_ways(j)
+    res = choose_allocation(c, j, ways, lookahead=[])
+    assert sum(res.placement.values()) == 4
+    assert res.used_solver or len(ways) == 1
+    # chosen placement must be allocatable
+    c.allocate(j, res.placement)
+    c.release(j, res.placement)
+
+
+def test_lookahead_influences_choice():
+    """With an 8-GPU job waiting, the solver should leave a node whole."""
+    c = ClusterState(make_cluster("helios"))
+    # fill most nodes so spreading would fragment the last full nodes
+    for i in range(8):
+        filler = mk(100 + i, 6)
+        c.allocate(filler, {i: 6})
+    j = mk(0, 4)
+    big = mk(1, 8)
+    ways = c.candidate_ways(j)
+    res = choose_allocation(c, j, ways, lookahead=[big])
+    c.allocate(j, res.placement)
+    assert c.can_schedule_now(big), \
+        "look-ahead MILP must preserve an 8-GPU hole"
+
+
+def test_respects_cpu_mem_constraints():
+    c = ClusterState(make_cluster("helios"))
+    # drain CPU on node 0 so it cannot host GPU jobs despite free GPUs
+    c.free_cpus[0] = 1
+    j = mk(0, 8, cpus=32, mem=64.0)
+    ways = c.candidate_ways(j)
+    res = choose_allocation(c, j, ways)
+    frac = {n: g / 8 for n, g in res.placement.items()}
+    for n, g in res.placement.items():
+        assert c.free_cpus[n] >= round(32 * frac[n])
+
+
+def test_greedy_fallback():
+    c = ClusterState(make_cluster("helios"))
+    j = mk(0, 4)
+    ways = c.candidate_ways(j)
+    res = _greedy_choice(c, j, ways, [mk(1, 8)])
+    assert res.placement in ways
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=16),
+       st.integers(min_value=0, max_value=4))
+def test_solver_feasibility_property(gpus, n_look):
+    """Whatever the MILP picks must satisfy every per-node resource bound."""
+    c = ClusterState(make_cluster("helios"))
+    j = mk(0, gpus)
+    ways = c.candidate_ways(j)
+    if not ways:
+        return
+    look = [mk(10 + i, 2) for i in range(n_look)]
+    res = choose_allocation(c, j, ways, lookahead=look)
+    assert sum(res.placement.values()) == gpus
+    for n, g in res.placement.items():
+        assert g <= c.free_gpus[n]

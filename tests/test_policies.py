@@ -1,0 +1,73 @@
+import numpy as np
+
+from repro.core import BASE_POLICIES, Job, make_policy
+
+
+def mk(i, submit, runtime, gpus, user=0):
+    return Job(job_id=i, user=user, submit_time=submit, runtime=runtime,
+               est_runtime=runtime, num_gpus=gpus)
+
+
+def test_fcfs_orders_by_submit():
+    p = make_policy("fcfs")
+    a, b = mk(0, 10, 100, 1), mk(1, 5, 100, 1)
+    assert p.score(b, 20) < p.score(a, 20)
+
+
+def test_sjf_prefers_short():
+    p = make_policy("sjf")
+    assert p.score(mk(0, 0, 50, 1), 0) < p.score(mk(1, 0, 500, 1), 0)
+
+
+def test_wfp3_prefers_long_waiters():
+    p = make_policy("wfp3")
+    waited = mk(0, 0, 100, 2)
+    fresh = mk(1, 990, 100, 2)
+    assert p.score(waited, 1000) < p.score(fresh, 1000)
+
+
+def test_unicep_penalizes_size():
+    p = make_policy("unicep")
+    small = mk(0, 0, 100, 2)
+    big = mk(1, 0, 100, 32)
+    assert p.score(small, 500) < p.score(big, 500)
+
+
+def test_f1_uses_logs():
+    p = make_policy("f1")
+    s = p.score(mk(0, 100, 100, 4), 200)
+    assert np.isfinite(s)
+
+
+def test_qssf_learns_history():
+    p = make_policy("qssf")
+    j = mk(0, 0, 5000, 2, user=7)
+    cold = p.score(j, 0)
+    done = mk(1, 0, 10.0, 1, user=7)
+    done.start_time, done.finish_time = 0.0, 10.0
+    p.observe_finish(done)
+    warm = p.score(j, 0)
+    assert warm < cold  # history says user 7 runs short jobs
+
+
+def test_slurm_multifactor_fairshare():
+    p = make_policy("slurm-mf")
+    heavy, light = 1, 2
+    done = mk(9, 0, 1e6, 8, user=heavy)
+    p.observe_finish(done)
+    s_heavy = p.score(mk(0, 0, 100, 1, user=heavy), 10)
+    s_light = p.score(mk(1, 0, 100, 1, user=light), 10)
+    assert s_light < s_heavy  # light user gets priority
+
+
+def test_registry_all():
+    for name in BASE_POLICIES:
+        p = make_policy(name)
+        assert np.isfinite(p.score(mk(0, 1, 100, 2), 50))
+
+
+def test_estimates_mode():
+    p = make_policy("sjf", use_estimates=True)
+    j = mk(0, 0, 100, 1)
+    j.est_runtime = 10_000.0
+    assert p.score(j, 0) == 10_000.0

@@ -1,0 +1,59 @@
+import jax
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.sharding.specs import (DEFAULT_RULES, logical_spec, sanitize_spec,
+                                  spec_tree)
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        import numpy as np
+        self.devices = np.empty(shape)
+
+
+MESH2 = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_basic_mapping():
+    assert logical_spec(("batch", "seq", "embed_act"), mesh=MESH2) == \
+        PS("data")
+    assert logical_spec(("batch", None, "vocab"), mesh=MESH2) == \
+        PS("data", None, "model")
+
+
+def test_pod_axis_dropped_on_single_pod():
+    s2 = logical_spec(("batch",), mesh=MESH2)
+    s3 = logical_spec(("batch",), mesh=MESH3)
+    assert s2 == PS("data")
+    assert s3 == PS(("pod", "data"))
+
+
+def test_no_duplicate_axis_use():
+    # embed->data and batch->(pod,data) in one spec: data used once
+    spec = logical_spec(("batch", "embed"), mesh=MESH2)
+    flat = []
+    for e in spec:
+        if e is None:
+            continue
+        flat.extend(e if isinstance(e, tuple) else (e,))
+    assert len(flat) == len(set(flat))
+
+
+def test_sanitize_drops_indivisible():
+    mesh = FakeMesh((16, 16), ("data", "model"))
+    spec = PS("data", "model")
+    assert sanitize_spec(spec, (32, 64), mesh) == PS("data", "model")
+    assert sanitize_spec(spec, (32, 6), mesh) == PS("data")
+    assert sanitize_spec(PS(("pod", "data")), (3,), MESH3) == PS()
+    # tuple prefix kept when only the tail fails
+    assert sanitize_spec(PS(("pod", "data")), (4,), MESH3) == PS("pod")
+
+
+def test_spec_tree():
+    tree = {"w": ("embed", "ffn"), "b": (None,)}
+    out = spec_tree(tree, mesh=MESH2)
+    assert out["w"] == PS("data", "model")
+    assert out["b"] == PS()

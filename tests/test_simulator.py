@@ -1,0 +1,101 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (FaultModel, PolicyPrioritizer, Simulator,
+                        generate_trace, make_cluster, make_policy)
+from repro.core.types import JobState
+
+
+def run(jobs, policy="fcfs", **kw):
+    sim = Simulator(make_cluster("helios"), **kw)
+    return sim.run_batch([j.clone_pending() for j in jobs],
+                         PolicyPrioritizer(make_policy(policy)))
+
+
+def test_all_jobs_complete(helios_jobs):
+    res = run(helios_jobs[:64])
+    assert len(res.jobs) == 64
+    for j in res.jobs:
+        assert j.state == JobState.COMPLETED
+        assert j.start_time >= j.submit_time - 1e-9
+        assert j.finish_time > j.start_time
+
+
+def test_metrics_consistency(helios_jobs):
+    res = run(helios_jobs[:64])
+    assert res.avg_jct >= res.avg_wait
+    assert res.avg_bsld >= 1.0
+    assert 0.0 <= res.utilization <= 1.0
+    assert res.score("util") == -res.utilization
+
+
+def test_heterogeneous_speedup(helios_jobs):
+    """V100 placements finish faster than runtime (speed 1.5)."""
+    res = run(helios_jobs[:64])
+    quick = [j for j in res.jobs
+             if j.finish_time - j.start_time < j.runtime * 0.99]
+    assert quick, "some jobs should land on fast V100 nodes"
+
+
+def test_allocators_differ(helios_jobs):
+    waits = {}
+    for alloc in ("pack", "spread", "milp"):
+        res = run(helios_jobs[:96], allocator=alloc)
+        waits[alloc] = res.total_wait
+        assert len(res.jobs) == 96
+    assert len(set(round(w, 3) for w in waits.values())) >= 1  # all complete
+
+
+def test_backfill_reduces_wait():
+    jobs = generate_trace("philly", 128, seed=7)
+    spec = make_cluster("philly")
+    r_on = Simulator(spec, backfill=True, allocator="pack").run_batch(
+        [j.clone_pending() for j in jobs],
+        PolicyPrioritizer(make_policy("fcfs")))
+    r_off = Simulator(spec, backfill=False, allocator="pack").run_batch(
+        [j.clone_pending() for j in jobs],
+        PolicyPrioritizer(make_policy("fcfs")))
+    assert r_on.backfills >= 0
+    assert r_on.total_wait <= r_off.total_wait * 1.05
+
+
+def test_fault_injection_restarts():
+    jobs = generate_trace("philly", 48, seed=3)
+    fm = FaultModel(mtbf_per_node=3 * 3600.0, repair_time=600.0, seed=1)
+    sim = Simulator(make_cluster("philly"), fault_model=fm, allocator="pack")
+    res = sim.run_batch([j.clone_pending() for j in jobs],
+                        PolicyPrioritizer(make_policy("fcfs")))
+    assert len(res.jobs) == 48          # completes despite failures
+    assert res.restarts > 0             # failures actually hit running jobs
+    assert all(j.finish_time > 0 for j in res.jobs)
+
+
+def test_checkpoint_limits_lost_work():
+    """With checkpointing, a restarted job's total span stays bounded."""
+    jobs = generate_trace("philly", 32, seed=11)
+    fm = FaultModel(mtbf_per_node=2 * 3600.0, repair_time=300.0,
+                    ckpt_interval=600.0, seed=2)
+    sim = Simulator(make_cluster("philly"), fault_model=fm, allocator="pack")
+    res = sim.run_batch([j.clone_pending() for j in jobs],
+                        PolicyPrioritizer(make_policy("fcfs")))
+    for j in res.jobs:
+        if j.restarts:
+            # span <= wait + (restarts+1) x runtime + repair slack
+            span = j.finish_time - j.submit_time
+            assert span < j.wait_time + (j.restarts + 1) * j.runtime / 0.2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.sampled_from(["fcfs", "sjf", "wfp3"]))
+def test_property_completion(seed, policy):
+    jobs = generate_trace("helios", 32, seed=seed)
+    res = run(jobs, policy=policy)
+    assert len(res.jobs) == 32
+    ids = sorted(j.job_id for j in res.jobs)
+    assert ids == sorted(j.job_id for j in jobs)     # conservation
+    # gang: every job fully placed exactly while running
+    assert all(j.placement is None or j.state == JobState.COMPLETED
+               for j in res.jobs)

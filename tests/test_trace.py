@@ -1,0 +1,61 @@
+import numpy as np
+import pytest
+
+from repro.core import PROFILES, generate_trace, load_trace_csv, make_cluster
+from repro.core.trace import batch_iter, train_eval_split
+
+
+def test_deterministic():
+    a = generate_trace("philly", 100, seed=3)
+    b = generate_trace("philly", 100, seed=3)
+    assert [(j.submit_time, j.runtime, j.num_gpus) for j in a] == \
+        [(j.submit_time, j.runtime, j.num_gpus) for j in b]
+    c = generate_trace("philly", 100, seed=4)
+    assert [j.runtime for j in a] != [j.runtime for j in c]
+
+
+@pytest.mark.parametrize("name", list(PROFILES))
+def test_statistics_match_profile(name):
+    prof = PROFILES[name]
+    jobs = generate_trace(name, 4000, seed=0)
+    # arrival rate within 3x of profile (bursty MMPP inflates it)
+    span = jobs[-1].submit_time - jobs[0].submit_time
+    rate = len(jobs) / span
+    assert prof.arrival_rate / 2 < rate < prof.arrival_rate * 4
+    # runtime scale: sample mean within an order of magnitude (heavy tails)
+    mean_rt = np.mean([j.runtime for j in jobs])
+    assert prof.runtime_mean / 5 < mean_rt < prof.runtime_mean * 5
+    # demand distribution covers the profile's support
+    demands = {j.num_gpus for j in jobs}
+    assert {d for d, _ in prof.gpu_demand} >= demands
+    assert all(j.submit_time <= jobs[i + 1].submit_time
+               for i, j in enumerate(jobs[:-1]))
+
+
+def test_clusters():
+    for name in ("philly", "helios", "alibaba", "slurm-testbed"):
+        spec = make_cluster(name)
+        assert spec.total_gpus > 0
+        assert len(spec.gpu_types) >= 1
+    assert make_cluster("slurm-testbed").total_gpus == 2 * 4 + 2 * 2 + 1
+
+
+def test_csv_roundtrip(tmp_path):
+    jobs = generate_trace("helios", 20, seed=1)
+    p = tmp_path / "t.csv"
+    with open(p, "w") as f:
+        f.write("job_id,user,submit_time,runtime,num_gpus,gpu_type\n")
+        for j in jobs:
+            f.write(f"{j.job_id},{j.user},{j.submit_time},{j.runtime},"
+                    f"{j.num_gpus},{j.gpu_type}\n")
+    loaded = load_trace_csv(str(p))
+    assert len(loaded) == 20
+    assert loaded[0].num_gpus == jobs[0].num_gpus
+
+
+def test_split_and_batches():
+    jobs = generate_trace("helios", 300, seed=0)
+    tr, ev = train_eval_split(jobs, 0.9)
+    assert len(tr) == 270 and len(ev) == 30
+    batches = list(batch_iter(jobs, 64))
+    assert all(len(b) == 64 for b in batches)

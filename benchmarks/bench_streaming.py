@@ -1,0 +1,114 @@
+"""Streaming engine benchmark: sustained jobs/sec and decision latency on
+>=10k-job continuous streams (the paper's Sec. 3.1.2 service mode at scale).
+
+Measures, per scenario and queue window:
+- end-to-end simulated-stream throughput (completed jobs per wall-second)
+- mean / p99 scheduler decision latency (wall time per prioritize+allocate
+  round, the quantity a 1-minute Slurm rescan loop must stay under)
+- rolling-telemetry summary (utilization, p99 queueing delay, peak queue)
+
+REPRO_BENCH_SCALE=full streams 20k jobs; default (quick) streams 10k.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import PolicyPrioritizer, make_policy
+from repro.sched import RollingTelemetry, SchedulerEngine, get_scenario
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
+NUM_JOBS = int(os.environ.get("REPRO_BENCH_STREAM_JOBS",
+                              {"quick": 10_000, "full": 20_000}[SCALE]))
+SCENARIOS = ("steady", "diurnal", "flash-crowd")
+QUEUE_WINDOWS = (256, 1024)
+
+
+class _DecisionTimer:
+    """Wraps a prioritizer to record wall-clock rank() latency."""
+
+    def __init__(self, base):
+        self.base = base
+        self.use_estimates = base.use_estimates
+        self.lat: list[float] = []
+
+    def rank(self, jobs, cluster, now):
+        t0 = time.perf_counter()
+        out = self.base.rank(jobs, cluster, now)
+        self.lat.append(time.perf_counter() - t0)
+        return out
+
+    def observe_finish(self, job):
+        self.base.observe_finish(job)
+
+
+def stream_once(scenario: str, queue_window: int) -> dict:
+    run = get_scenario(scenario).build(NUM_JOBS, seed=0)
+    pri = _DecisionTimer(PolicyPrioritizer(make_policy("fcfs")))
+    tel = RollingTelemetry(window=6 * 3600.0, sample_interval=3600.0)
+    engine = SchedulerEngine(run.spec, pri, allocator="pack",
+                             fault_model=run.fault_model,
+                             queue_window=queue_window, hooks=(tel,))
+    jobs = [j.clone_pending() for j in run.jobs]
+    t0 = time.perf_counter()
+    # stream in 1h-of-simulated-time chunks, stepping as each chunk lands;
+    # the horizon is anchored on the next due arrival-or-event so traffic
+    # gaps are skipped and no event ever runs ahead of an unfed arrival
+    feed = 0
+    while True:
+        nxt = engine.next_event_time()
+        if feed < len(jobs):
+            nxt = min(nxt, jobs[feed].submit_time)
+        if nxt == float("inf"):
+            break
+        horizon = max(engine.now, nxt) + 3600.0
+        hi = feed
+        while hi < len(jobs) and jobs[hi].submit_time <= horizon:
+            hi += 1
+        if hi > feed:
+            engine.submit(jobs[feed:hi])
+            feed = hi
+        engine.step(horizon)
+    wall = time.perf_counter() - t0
+    tel.final(engine)
+    lat = np.array(pri.lat) if pri.lat else np.zeros(1)
+    util = [s.utilization for s in tel.samples]
+    return {
+        "completed": len(engine.completed),
+        "wall_s": wall,
+        "jobs_per_s": len(engine.completed) / max(wall, 1e-9),
+        "decisions": engine.decisions,
+        "lat_mean_ms": 1e3 * float(lat.mean()),
+        "lat_p99_ms": 1e3 * float(np.percentile(lat, 99)),
+        "util_mean": float(np.mean(util)) if util else 0.0,
+        "wait_p99_h": tel.worst_wait_p99() / 3600.0,
+        "peak_queue": tel.peak_queue_len(),
+    }
+
+
+def run(out: list[str] | None = None) -> None:
+    print(f"# streaming engine: {NUM_JOBS} jobs/stream, FCFS+pack, "
+          f"1h ingest chunks")
+    print(f"{'scenario':12s} {'qwin':>5s} {'jobs/s':>8s} {'dec':>7s} "
+          f"{'lat.mean':>9s} {'lat.p99':>8s} {'util':>5s} {'waitP99h':>8s} "
+          f"{'peakQ':>6s} {'wall(s)':>8s}")
+    for scenario in SCENARIOS:
+        for qw in QUEUE_WINDOWS:
+            r = stream_once(scenario, qw)
+            assert r["completed"] == NUM_JOBS, (scenario, qw, r["completed"])
+            line = (f"{scenario:12s} {qw:5d} {r['jobs_per_s']:8.0f} "
+                    f"{r['decisions']:7d} {r['lat_mean_ms']:7.2f}ms "
+                    f"{r['lat_p99_ms']:6.2f}ms {r['util_mean']:5.2f} "
+                    f"{r['wait_p99_h']:8.1f} {r['peak_queue']:6d} "
+                    f"{r['wall_s']:8.1f}")
+            print(line)
+            if out is not None:
+                out.append(f"streaming/{scenario}/qw{qw},"
+                           f"{1e3 * r['lat_mean_ms']:.1f},"
+                           f"{r['jobs_per_s']:.0f} jobs/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,7 @@ import sys
 import time
 
 MODULES = ("latency", "kernels", "roofline", "variability", "naive", "qssf",
-           "util", "transfer", "policies")
+           "util", "transfer", "policies", "streaming")
 
 
 def main() -> None:

@@ -1,5 +1,6 @@
-"""Fault-tolerant checkpointing: msgpack + zstd shards, atomic commit,
-elastic restore (reshard onto a different mesh).
+"""Fault-tolerant checkpointing: msgpack + compressed shards (zstd when
+available, stdlib zlib otherwise), atomic commit, elastic restore (reshard
+onto a different mesh).
 
 Layout:  <dir>/step_<N>.tmp/  ->  rename  ->  <dir>/step_<N>/
            manifest.msgpack            {key: {shape, dtype, file}}
@@ -20,7 +21,32 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as _zstd
+except ImportError:          # minimal install: fall back to stdlib zlib
+    _zstd = None
+import zlib as _zlib
+
+
+def _compress(raw: bytes) -> bytes:
+    if _zstd is not None:
+        return _zstd.ZstdCompressor(level=3).compress(raw)
+    return _zlib.compress(raw, 3)
+
+
+def _decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if _zstd is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd; install the [compress] extra")
+        return _zstd.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return _zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+_CODEC = "zstd" if _zstd is not None else "zlib"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -45,16 +71,16 @@ def save_checkpoint(path: str, step: int, tree) -> str:
     final = os.path.join(path, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
-    cctx = zstd.ZstdCompressor(level=3)
     manifest = {}
     for i, (key, arr) in enumerate(sorted(flat.items())):
         fname = f"{i:05d}.bin"
         with open(os.path.join(tmp, fname), "wb") as f:
-            f.write(cctx.compress(np.ascontiguousarray(arr).tobytes()))
+            f.write(_compress(np.ascontiguousarray(arr).tobytes()))
         manifest[key] = {"shape": list(arr.shape), "dtype": str(arr.dtype),
                          "file": fname}
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-        f.write(msgpack.packb({"step": step, "leaves": manifest}))
+        f.write(msgpack.packb({"step": step, "codec": _CODEC,
+                               "leaves": manifest}))
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)                      # atomic commit
@@ -83,7 +109,7 @@ def load_checkpoint(path: str, target_tree, step: int | None = None,
     with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     leaves_meta = manifest["leaves"]
-    dctx = zstd.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")   # pre-fallback checkpoints: zstd
 
     paths_leaves = jax.tree_util.tree_flatten_with_path(target_tree)[0]
     specs_flat = (jax.tree.leaves(
@@ -95,7 +121,7 @@ def load_checkpoint(path: str, target_tree, step: int | None = None,
         meta = leaves_meta.get(key)
         assert meta is not None, f"checkpoint missing leaf {key}"
         with open(os.path.join(d, meta["file"]), "rb") as f:
-            raw = dctx.decompress(f.read())
+            raw = _decompress(f.read(), codec)
         arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])) \
             .reshape(meta["shape"]).copy()
         want_dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype

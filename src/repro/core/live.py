@@ -18,8 +18,8 @@ from repro.core.agent import PPOAgent
 from repro.core.cluster import ClusterState
 from repro.core.features import MAX_QUEUE_SIZE, build_state
 from repro.core.policies import Policy, make_policy
-from repro.core.simulator import Simulator
 from repro.core.types import ClusterSpec, Job
+from repro.sched.service import run_stream
 
 
 @dataclasses.dataclass
@@ -72,9 +72,14 @@ class LivePrioritizer:
 
 def run_live(spec: ClusterSpec, jobs: list[Job], agent: PPOAgent,
              cfg: LiveConfig | None = None):
-    """Simulated live deployment: returns (BatchResult, rescans)."""
+    """Simulated live deployment: returns (BatchResult, rescans).
+
+    Routes through the streaming service driver (repro.sched.service): the
+    engine steps in `rescan_interval` windows exactly as the Slurm loop
+    would poll it.  Window boundaries are unobservable to the schedule, so
+    results match the former batch path bit-for-bit."""
     cfg = cfg or LiveConfig()
     pri = LivePrioritizer(agent, cfg)
-    sim = Simulator(spec, allocator="milp")
-    res = sim.run_batch([j.clone_pending() for j in jobs], pri)
-    return res, pri.rescans
+    res = run_stream(spec, [j.clone_pending() for j in jobs], pri,
+                     rescan_interval=cfg.rescan_interval, allocator="milp")
+    return res.batch, pri.rescans

@@ -1,0 +1,35 @@
+"""Queue-prioritizer interface shared by the batch simulator and the
+streaming engine (leaf module: keeps repro.core <-> repro.sched acyclic)."""
+from __future__ import annotations
+
+from typing import Protocol
+
+import numpy as np
+
+from repro.core.cluster import ClusterState
+from repro.core.policies import Policy
+from repro.core.types import Job
+
+
+class Prioritizer(Protocol):
+    """Ranks the pending queue; index 0 = schedule first."""
+
+    use_estimates: bool
+
+    def rank(self, jobs: list[Job], cluster: ClusterState, now: float) -> list[int]: ...
+    def observe_finish(self, job: Job) -> None: ...
+
+
+class PolicyPrioritizer:
+    """Adapter: a Table-5 policy as a Prioritizer (lowest score first)."""
+
+    def __init__(self, policy: Policy):
+        self.policy = policy
+        self.use_estimates = getattr(policy, "use_estimates", False)
+
+    def rank(self, jobs: list[Job], cluster: ClusterState, now: float) -> list[int]:
+        scores = [self.policy.score(j, now) for j in jobs]
+        return list(np.argsort(scores, kind="stable"))
+
+    def observe_finish(self, job: Job) -> None:
+        self.policy.observe_finish(job)

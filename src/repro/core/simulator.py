@@ -9,49 +9,26 @@ faster/slower SKUs scale the job's wall runtime.  Optional fault injection
 
 Ground-truth runtimes drive the simulation clock; user estimates are only
 used by policies/backfill when `use_estimates=True` (evaluation realism).
+
+The event loop itself lives in ``repro.sched.engine.SchedulerEngine`` (the
+streaming service mode); ``Simulator.run_batch`` is a thin batch-semantics
+wrapper over it — submit everything upfront, run to completion from an idle
+cluster — and is bit-identical to the pre-extraction implementation on
+fixed seeds.  ``Prioritizer`` / ``PolicyPrioritizer`` are re-exported here
+for backwards compatibility.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from typing import Protocol
-
-import numpy as np
-
-from repro.core.cluster import ClusterState, Placement
-from repro.core.faults import FaultInjector, FaultModel
+from repro.core.faults import FaultModel
 from repro.core.metrics import BatchResult
-from repro.core.milp import choose_allocation
-from repro.core.policies import Policy
-from repro.core.types import ClusterSpec, Job, JobState
+from repro.core.prioritizer import PolicyPrioritizer, Prioritizer
+from repro.core.types import ClusterSpec, Job
 
-
-class Prioritizer(Protocol):
-    """Ranks the pending queue; index 0 = schedule first."""
-
-    use_estimates: bool
-
-    def rank(self, jobs: list[Job], cluster: ClusterState, now: float) -> list[int]: ...
-    def observe_finish(self, job: Job) -> None: ...
-
-
-class PolicyPrioritizer:
-    """Adapter: a Table-5 policy as a Prioritizer (lowest score first)."""
-
-    def __init__(self, policy: Policy):
-        self.policy = policy
-        self.use_estimates = getattr(policy, "use_estimates", False)
-
-    def rank(self, jobs: list[Job], cluster: ClusterState, now: float) -> list[int]:
-        scores = [self.policy.score(j, now) for j in jobs]
-        return list(np.argsort(scores, kind="stable"))
-
-    def observe_finish(self, job: Job) -> None:
-        self.policy.observe_finish(job)
+__all__ = ["Prioritizer", "PolicyPrioritizer", "Simulator"]
 
 
 class Simulator:
-    """Discrete-event simulator for one cluster."""
+    """Discrete-event simulator for one cluster (batch semantics)."""
 
     def __init__(
         self,
@@ -63,6 +40,7 @@ class Simulator:
         fault_model: FaultModel | None = None,
         straggler_migration: bool = True,
         max_sim_time: float = 90 * 86400.0,
+        queue_window: int | None = None,   # None = engine default (2560)
     ):
         self.spec = spec
         self.allocator = allocator
@@ -71,230 +49,27 @@ class Simulator:
         self.fault_model = fault_model
         self.straggler_migration = straggler_migration
         self.max_sim_time = max_sim_time
+        self.queue_window = queue_window
+
+    def make_engine(self, prioritizer: Prioritizer) -> "SchedulerEngine":
+        """A fresh streaming engine configured like this simulator."""
+        # imported lazily: repro.sched layers on top of repro.core, so the
+        # core package must be importable without sched being initialized
+        from repro.sched.engine import SchedulerEngine
+        return SchedulerEngine(
+            self.spec, prioritizer, allocator=self.allocator,
+            backfill=self.backfill, lookahead_k=self.lookahead_k,
+            fault_model=self.fault_model,
+            straggler_migration=self.straggler_migration,
+            max_sim_time=self.max_sim_time, queue_window=self.queue_window,
+        )
 
     # ------------------------------------------------------------------ run ----
     def run_batch(self, jobs: list[Job], prioritizer: Prioritizer,
                   start_idle: bool = True) -> BatchResult:
         """Schedule `jobs` to completion from an idle cluster; returns metrics."""
         assert start_idle
-        cluster = ClusterState(self.spec)
-        jobs = sorted(jobs, key=lambda j: j.submit_time)
-        t0 = jobs[0].submit_time if jobs else 0.0
-
-        seq = itertools.count()
-        events: list[tuple[float, int, str, object]] = []
-        for j in jobs:
-            heapq.heappush(events, (j.submit_time, next(seq), "arrival", j))
-
-        injector = None
-        if self.fault_model is not None:
-            horizon = t0 + self.max_sim_time
-            injector = FaultInjector(self.fault_model, len(self.spec.nodes), horizon)
-            # fault marker events so the clock advances to fault instants
-            for (ft, kind, node) in list(injector.events):
-                heapq.heappush(events, (ft, next(seq), "fault", node))
-
-        pending: list[Job] = []
-        # job_id -> (job, placement, start, finish, speed, remaining_at_start)
-        running: dict[int, list] = {}
-        remaining: dict[int, float] = {j.job_id: j.runtime for j in jobs}
-        completed: list[Job] = []
-        gpu_seconds = 0.0
-        decisions = milp_calls = backfills = restarts = 0
-        slow_nodes: dict[int, float] = {}
-        now = t0
-
-        def effective_speed(placement: Placement) -> float:
-            sp = min(cluster.speeds[i] * slow_nodes.get(i, 1.0) for i in placement)
-            return max(float(sp), 1e-3)
-
-        def start_job(job: Job, placement: Placement) -> None:
-            nonlocal gpu_seconds
-            cluster.allocate(job, placement)
-            speed = effective_speed(placement)
-            dur = remaining[job.job_id] / speed
-            finish = now + dur
-            if job.start_time < 0:
-                job.start_time = now
-            job.state = JobState.RUNNING
-            job.placement = placement
-            running[job.job_id] = [job, placement, now, finish, speed]
-            heapq.heappush(events, (finish, next(seq), "finish", job.job_id))
-
-        def est_rt(job: Job) -> float:
-            rt = job.est_runtime if prioritizer.use_estimates else job.runtime
-            return max(rt, 1.0)
-
-        def alloc_for(job: Job, queue_rest: list[Job]) -> Placement | None:
-            nonlocal milp_calls
-            ways = cluster.candidate_ways(job)
-            if not ways:
-                return None
-            if self.allocator in ("pack", "spread"):
-                pl = cluster.find_placement(job, self.allocator)
-                if pl is None:  # CPU/mem coupling edge: fall back to the other mode
-                    other = "spread" if self.allocator == "pack" else "pack"
-                    pl = cluster.find_placement(job, other)
-                return pl
-            use_solver = self.allocator == "milp"
-            if use_solver and len(ways) > 1:
-                milp_calls += 1
-            res = choose_allocation(cluster, job, ways, queue_rest,
-                                    lookahead_k=self.lookahead_k,
-                                    use_solver=use_solver)
-            return res.placement
-
-    # -- EASY backfill: earliest start for the reserved job -----------------
-        def earliest_start(job: Job) -> float:
-            free = cluster.free_gpus.copy()
-            sim = ClusterState(self.spec)
-            sim.free_gpus = free.copy()
-            sim.free_cpus = cluster.free_cpus.copy()
-            sim.free_mem = cluster.free_mem.copy()
-            sim.node_down = cluster.node_down.copy()
-            if sim.find_placement(job, "pack") is not None:
-                return now
-            for jid, (rj, pl, st, fin, sp) in sorted(running.items(),
-                                                     key=lambda kv: kv[1][3]):
-                sim.release(rj, pl)
-                if sim.find_placement(job, "pack") is not None:
-                    return fin
-            return float("inf")
-
-        def kill_job(jid: int, preserve_ckpt: bool) -> None:
-            nonlocal restarts
-            job, placement, st, fin, speed = running.pop(jid)
-            cluster.release(job, placement)
-            elapsed = max(0.0, now - st)
-            work_done = elapsed * speed
-            if preserve_ckpt and injector is not None:
-                k = int(elapsed // self.fault_model.ckpt_interval)
-                work_done = min(k * self.fault_model.ckpt_interval * speed,
-                                work_done)
-            elif not preserve_ckpt:
-                work_done = 0.0
-            remaining[jid] = max(remaining[jid] - work_done, 1.0)
-            job.state = JobState.PENDING
-            job.placement = None
-            job.restarts += 1
-            restarts += 1
-            pending.append(job)
-
-        def finish_job(jid: int) -> None:
-            nonlocal gpu_seconds
-            rec = running.pop(jid, None)
-            if rec is None:
-                return
-            job, placement, st, fin, speed = rec
-            cluster.release(job, placement)
-            job.finish_time = now
-            job.state = JobState.COMPLETED
-            gpu_seconds += job.num_gpus * (now - job.start_time)
-            completed.append(job)
-            prioritizer.observe_finish(job)
-
-        def handle_faults() -> None:
-            if injector is None:
-                return
-            for (ft, kind, node) in injector.pop_due(now):
-                if kind == "fail":
-                    cluster.fail_node(node)
-                    for jid in [jid for jid, rec in running.items()
-                                if node in rec[1]]:
-                        kill_job(jid, preserve_ckpt=True)
-                elif kind == "recover":
-                    cluster.recover_node(node)
-                elif kind == "slow":
-                    slow_nodes[node] = self.fault_model.straggler_slowdown
-                    _rescale_running(node)
-                elif kind == "unslow":
-                    slow_nodes.pop(node, None)
-                    _rescale_running(node)
-
-        def _rescale_running(node: int) -> None:
-            for jid, rec in list(running.items()):
-                job, placement, st, fin, speed = rec
-                if node not in placement:
-                    continue
-                new_speed = effective_speed(placement)
-                if self.straggler_migration and new_speed < 0.6 * speed:
-                    # checkpoint + re-queue: the scheduler will replace it
-                    kill_job(jid, preserve_ckpt=True)
-                    continue
-                left = max(fin - now, 0.0) * speed / new_speed
-                rec[3] = now + left
-                rec[4] = new_speed
-                heapq.heappush(events, (rec[3], next(seq), "finish", jid))
-
-        def try_schedule() -> None:
-            nonlocal decisions, backfills
-            while pending:
-                pending.sort(key=lambda j: (j.submit_time, j.job_id))
-                queue = pending[: 10 * 256]
-                if not any(cluster.can_schedule_now(j) for j in queue):
-                    return
-                order = prioritizer.rank(queue, cluster, now)
-                decisions += 1
-                top = queue[order[0]]
-                rest = [queue[i] for i in order[1:1 + self.lookahead_k]]
-                placement = alloc_for(top, rest)
-                if placement is not None:
-                    pending.remove(top)
-                    start_job(top, placement)
-                    continue
-                if not self.backfill:
-                    return
-                # EASY backfill under reservation for `top`
-                t_res = earliest_start(top)
-                progressed = False
-                for i in order[1:]:
-                    cand = queue[i]
-                    if cand.state != JobState.PENDING or cand is top:
-                        continue
-                    if now + est_rt(cand) > t_res:
-                        continue
-                    pl = alloc_for(cand, [])
-                    if pl is not None:
-                        pending.remove(cand)
-                        start_job(cand, pl)
-                        backfills += 1
-                        progressed = True
-                if not progressed:
-                    return
-                # after backfills the reserved job may now fit; loop again
-                if not cluster.can_schedule_now(top):
-                    return
-
-        # ------------------------------ main loop ------------------------------
-        guard = 0
-        guard_max = 200 * len(jobs) + 10_000 + \
-            (4 * len(injector.events) if injector is not None else 0)
-        while len(completed) < len(jobs):
-            guard += 1
-            assert guard < guard_max, "simulator stuck"
-            if not events:
-                break
-            now, _, kind, payload = heapq.heappop(events)
-            # fold in all events at the same instant
-            batch_evts = [(kind, payload)]
-            while events and events[0][0] <= now + 1e-9:
-                _, _, k2, p2 = heapq.heappop(events)
-                batch_evts.append((k2, p2))
-            handle_faults()
-            for k, p in batch_evts:
-                if k == "arrival":
-                    pending.append(p)
-                elif k == "finish":
-                    jid = p
-                    rec = running.get(jid)
-                    if rec is not None and abs(rec[3] - now) < 1e-6:
-                        finish_job(jid)
-            try_schedule()
-
-        makespan = max((j.finish_time for j in completed), default=now) - t0
-        capacity = self.spec.total_gpus * max(makespan, 1e-9)
-        return BatchResult(
-            jobs=completed, makespan=makespan, gpu_seconds_used=gpu_seconds,
-            gpu_seconds_capacity=capacity, decisions=decisions,
-            milp_calls=milp_calls, backfills=backfills, restarts=restarts,
-        )
+        engine = self.make_engine(prioritizer)
+        engine.submit(jobs)
+        engine.run_until_complete()
+        return engine.result()

@@ -162,6 +162,8 @@ def lower_cell(arch: str, shape_name: str, mesh, rules=None,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: list with one dict
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # per-chip collective bytes, while-trip-count corrected
     coll = collective_bytes(hlo)

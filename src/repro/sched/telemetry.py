@@ -1,0 +1,169 @@
+"""Rolling-window telemetry for the streaming scheduler engine.
+
+The paper evaluates batch-aggregate metrics (Sec. 4.4); a continuously
+running service instead needs *windowed* views: JCT / queueing-delay
+percentiles over the trailing window, a GPU-utilization timeline, and
+per-VC fairness — all without perturbing the schedule.  ``RollingTelemetry``
+implements the ``EngineHooks`` observer interface: the engine calls it on
+job start/finish/requeue and once per processed event batch; samples are
+emitted every ``sample_interval`` seconds of *simulated* time.
+
+Utilization is integrated exactly between event batches (busy-GPU fraction
+is piecewise-constant in a discrete-event simulation), so the timeline is
+not subject to sampling aliasing.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.types import Job
+
+# (finish_time, jct, wait, vc, gpu_seconds) per finished job, kept in a
+# deque and evicted once older than the rolling window
+_FinRec = collections.namedtuple("_FinRec", "t jct wait vc gpu_seconds")
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySample:
+    """One rolling-window measurement at simulated time ``time``."""
+
+    time: float
+    window: float
+    finished_in_window: int
+    throughput_jph: float        # finished jobs per hour of simulated time
+    jct_p50: float
+    jct_p95: float
+    jct_p99: float
+    wait_p50: float
+    wait_p95: float
+    wait_p99: float
+    utilization: float           # time-weighted busy-GPU fraction in window
+    queue_len: int
+    running: int
+    requeues: int                # fault-driven restarts in window
+    vc_fairness: float           # Jain's index over per-VC GPU-seconds
+
+
+def jain_index(shares: list[float]) -> float:
+    """Jain's fairness index: 1.0 = perfectly even, 1/n = one VC hogs all."""
+    xs = [s for s in shares if s > 0]
+    if not xs:
+        return 1.0
+    s1 = sum(xs)
+    s2 = sum(x * x for x in xs)
+    return float(s1 * s1 / (len(xs) * s2))
+
+
+class RollingTelemetry:
+    """EngineHooks observer computing rolling-window service metrics."""
+
+    def __init__(self, window: float = 6 * 3600.0,
+                 sample_interval: float = 600.0):
+        self.window = window
+        self.sample_interval = sample_interval
+        self.samples: list[TelemetrySample] = []
+        self._fin: collections.deque[_FinRec] = collections.deque()
+        self._requeues: collections.deque[float] = collections.deque()
+        # exact utilization integral: busy fraction is piecewise constant
+        # between event batches; (t, busy_frac) segments within the window
+        self._segments: collections.deque[tuple[float, float, float]] = \
+            collections.deque()  # (t_start, t_end, busy_frac)
+        self._last_t: float | None = None
+        self._last_busy: float = 0.0
+        self._next_sample: float | None = None
+        self.total_finished = 0
+
+    # ------------------------------------------------------------ hook API ----
+    def on_submit(self, job: Job, now: float) -> None: ...
+
+    def on_start(self, job: Job, now: float) -> None: ...
+
+    def on_finish(self, job: Job, now: float) -> None:
+        self._fin.append(_FinRec(now, job.jct, job.wait_time, job.vc,
+                                 job.num_gpus * (now - job.start_time)))
+        self.total_finished += 1
+
+    def on_requeue(self, job: Job, now: float) -> None:
+        self._requeues.append(now)
+
+    def on_tick(self, now: float, engine) -> None:
+        if self._last_t is None:
+            self._last_t = now
+            self._next_sample = now + self.sample_interval
+        if now > self._last_t:
+            self._segments.append((self._last_t, now, self._last_busy))
+        self._last_t = now
+        total = max(int(engine.cluster.total_gpus.sum()), 1)
+        self._last_busy = float(
+            (engine.cluster.total_gpus - engine.cluster.free_gpus).sum()
+        ) / total
+        self._evict(now)
+        if now >= self._next_sample:
+            self.samples.append(self._sample(now, engine))
+            self._next_sample = now + self.sample_interval
+
+    # ------------------------------------------------------------ internals ----
+    def _evict(self, now: float) -> None:
+        lo = now - self.window
+        while self._fin and self._fin[0].t < lo:
+            self._fin.popleft()
+        while self._requeues and self._requeues[0] < lo:
+            self._requeues.popleft()
+        while self._segments and self._segments[0][1] <= lo:
+            self._segments.popleft()
+
+    def _windowed_util(self, now: float) -> float:
+        lo = now - self.window
+        num = span = 0.0
+        for (a, b, busy) in self._segments:
+            a = max(a, lo)
+            if b <= a:
+                continue
+            num += (b - a) * busy
+            span += (b - a)
+        return num / span if span > 0 else self._last_busy
+
+    def _sample(self, now: float, engine) -> TelemetrySample:
+        jcts = np.array([r.jct for r in self._fin]) if self._fin else None
+        waits = np.array([r.wait for r in self._fin]) if self._fin else None
+
+        def pct(arr, q):
+            return float(np.percentile(arr, q)) if arr is not None else 0.0
+
+        by_vc: dict[int, float] = {}
+        for r in self._fin:
+            by_vc[r.vc] = by_vc.get(r.vc, 0.0) + r.gpu_seconds
+        span = min(self.window, max(now - (self._segments[0][0]
+                                           if self._segments else now), 1e-9))
+        return TelemetrySample(
+            time=now, window=self.window, finished_in_window=len(self._fin),
+            throughput_jph=len(self._fin) * 3600.0 / span,
+            jct_p50=pct(jcts, 50), jct_p95=pct(jcts, 95), jct_p99=pct(jcts, 99),
+            wait_p50=pct(waits, 50), wait_p95=pct(waits, 95),
+            wait_p99=pct(waits, 99),
+            utilization=self._windowed_util(now),
+            queue_len=len(engine.pending), running=len(engine.running),
+            requeues=len(self._requeues),
+            vc_fairness=jain_index(list(by_vc.values())),
+        )
+
+    # ------------------------------------------------------------ summaries ----
+    def final(self, engine) -> TelemetrySample:
+        """Force one sample at the current clock (end-of-run summary)."""
+        now = self._last_t if self._last_t is not None else 0.0
+        s = self._sample(now, engine)
+        self.samples.append(s)
+        return s
+
+    def peak_queue_len(self) -> int:
+        return max((s.queue_len for s in self.samples), default=0)
+
+    def worst_wait_p99(self) -> float:
+        return max((s.wait_p99 for s in self.samples), default=0.0)
+
+    def utilization_timeline(self) -> list[tuple[float, float]]:
+        return [(s.time, s.utilization) for s in self.samples]

@@ -11,6 +11,37 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+def hypothesis_or_stubs():
+    """Import (given, settings, st) from hypothesis, or — on minimal installs
+    without the [test] extra — return stand-ins that keep the module
+    collectable and mark each property test as skipped."""
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+        return given, settings, st
+    except ImportError:
+        skip = pytest.mark.skip(reason="hypothesis not installed")
+
+        def given(*a, **kw):
+            def deco(fn):
+                @skip
+                def stub():
+                    raise AssertionError("skipped: hypothesis missing")
+                stub.__name__ = fn.__name__
+                stub.__doc__ = fn.__doc__
+                return stub
+            return deco
+
+        def settings(*a, **kw):
+            return lambda fn: fn
+
+        class _Strategies:
+            def __getattr__(self, name):
+                return lambda *a, **kw: None
+
+        return given, settings, _Strategies()
+
+
 def run_py(code: str, devices: int = 0, timeout: int = 600) -> str:
     """Run a python snippet in a subprocess (optionally with N fake devices)."""
     env = dict(os.environ)

@@ -1,6 +1,7 @@
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from repro.data import SyntheticLMDataset, batch_for
 

@@ -1,6 +1,7 @@
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core import ClusterState, make_cluster
 from repro.core.features import (CV_SIZE, MAX_QUEUE_SIZE, NUM_FEATURES,

@@ -1,7 +1,8 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core import ClusterState, Job, choose_allocation, make_cluster
 from repro.core.milp import _greedy_choice

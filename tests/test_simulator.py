@@ -1,7 +1,8 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core import (FaultModel, PolicyPrioritizer, Simulator,
                         generate_trace, make_cluster, make_policy)

@@ -7,11 +7,20 @@ Measures, per scenario and queue window:
   round, the quantity a 1-minute Slurm rescan loop must stay under)
 - rolling-telemetry summary (utilization, p99 queueing delay, peak queue)
 
+A deep-queue point (flash-crowd @ queue_window=4096) tracks how decision
+latency grows with window size; with the indexed pending queue + feasibility
+cache the growth must stay sub-linear.  Results are written to
+``BENCH_streaming.json`` at the repo root so the perf trajectory is tracked
+across PRs, including the speedup over the recorded pre-optimization
+baseline.
+
 REPRO_BENCH_SCALE=full streams 20k jobs; default (quick) streams 10k.
 """
 from __future__ import annotations
 
+import json
 import os
+import platform
 import time
 
 import numpy as np
@@ -24,10 +33,26 @@ NUM_JOBS = int(os.environ.get("REPRO_BENCH_STREAM_JOBS",
                               {"quick": 10_000, "full": 20_000}[SCALE]))
 SCENARIOS = ("steady", "diurnal", "flash-crowd")
 QUEUE_WINDOWS = (256, 1024)
+#: deep-queue congestion point: decision latency must grow sub-linearly in
+#: the window size (compare against the qw=1024 row of the same scenario)
+DEEP_QUEUE = ("flash-crowd", 4096)
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_streaming.json")
+
+#: mean decision (rank) latency of the pre-optimization engine (naive
+#: re-sort + scalar scoring), measured on this container at quick scale
+#: (10k jobs, FCFS+pack) immediately before the indexed-queue/feasibility-
+#: cache PR — the denominator for the tracked speedup.
+PRE_PR_LAT_MEAN_MS = {
+    "steady/qw256": 0.13, "steady/qw1024": 0.27,
+    "diurnal/qw256": 0.09, "diurnal/qw1024": 0.27,
+    "flash-crowd/qw256": 0.11, "flash-crowd/qw1024": 0.31,
+}
 
 
 class _DecisionTimer:
-    """Wraps a prioritizer to record wall-clock rank() latency."""
+    """Wraps a prioritizer to record wall-clock rank() latency (both the
+    plain protocol entry point and the engine's contiguous-field one)."""
 
     def __init__(self, base):
         self.base = base
@@ -37,6 +62,15 @@ class _DecisionTimer:
     def rank(self, jobs, cluster, now):
         t0 = time.perf_counter()
         out = self.base.rank(jobs, cluster, now)
+        self.lat.append(time.perf_counter() - t0)
+        return out
+
+    def rank_window(self, jobs, cluster, now, fields):
+        base = getattr(self.base, "rank_window", None)
+        if base is None:
+            return self.rank(jobs, cluster, now)
+        t0 = time.perf_counter()
+        out = base(jobs, cluster, now, fields)
         self.lat.append(time.perf_counter() - t0)
         return out
 
@@ -88,26 +122,88 @@ def stream_once(scenario: str, queue_window: int) -> dict:
     }
 
 
+def _emit_json(results: dict[str, dict]) -> dict:
+    """Machine-readable perf record (tracked across PRs)."""
+    speedup = {}
+    if NUM_JOBS == 10_000:   # baseline was recorded at quick scale
+        for key, base_ms in PRE_PR_LAT_MEAN_MS.items():
+            if key in results and results[key]["lat_mean_ms"] > 0:
+                speedup[key] = round(base_ms / results[key]["lat_mean_ms"], 2)
+    deep_key = f"{DEEP_QUEUE[0]}/qw{DEEP_QUEUE[1]}"
+    ref_qw = QUEUE_WINDOWS[-1]       # derived, so the grid can't diverge
+    ref_key = f"{DEEP_QUEUE[0]}/qw{ref_qw}"
+    growth = None
+    if deep_key in results and ref_key in results \
+            and results[ref_key]["lat_mean_ms"] > 0:
+        ratio = results[deep_key]["lat_mean_ms"] / results[ref_key]["lat_mean_ms"]
+        growth = {
+            "ref_queue_window": ref_qw,
+            "window_ratio": DEEP_QUEUE[1] / ref_qw,
+            "latency_ratio": round(ratio, 3),
+            "sublinear": bool(ratio < DEEP_QUEUE[1] / ref_qw),
+        }
+    doc = {
+        "bench": "streaming",
+        "scale": SCALE,
+        "num_jobs": NUM_JOBS,
+        "policy": "fcfs",
+        "allocator": "pack",
+        # wall-clock latencies are machine-specific: the speedup figures are
+        # only meaningful when host matches the baseline's recorded host
+        "host": platform.node() or "unknown",
+        "machine": platform.machine(),
+        "baseline_host_note": "PRE_PR_LAT_MEAN_MS measured on the original "
+                              "CI container at quick scale; compare "
+                              "speedup_vs_pre_pr only on matching hardware",
+        "results": {k: {m: (round(v, 4) if isinstance(v, float) else v)
+                        for m, v in r.items()} for k, r in results.items()},
+        "pre_pr_baseline_lat_mean_ms": PRE_PR_LAT_MEAN_MS,
+        "speedup_vs_pre_pr": speedup,
+        "deep_queue_latency_growth": growth,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
 def run(out: list[str] | None = None) -> None:
     print(f"# streaming engine: {NUM_JOBS} jobs/stream, FCFS+pack, "
           f"1h ingest chunks")
     print(f"{'scenario':12s} {'qwin':>5s} {'jobs/s':>8s} {'dec':>7s} "
           f"{'lat.mean':>9s} {'lat.p99':>8s} {'util':>5s} {'waitP99h':>8s} "
           f"{'peakQ':>6s} {'wall(s)':>8s}")
-    for scenario in SCENARIOS:
-        for qw in QUEUE_WINDOWS:
-            r = stream_once(scenario, qw)
-            assert r["completed"] == NUM_JOBS, (scenario, qw, r["completed"])
-            line = (f"{scenario:12s} {qw:5d} {r['jobs_per_s']:8.0f} "
-                    f"{r['decisions']:7d} {r['lat_mean_ms']:7.2f}ms "
-                    f"{r['lat_p99_ms']:6.2f}ms {r['util_mean']:5.2f} "
-                    f"{r['wait_p99_h']:8.1f} {r['peak_queue']:6d} "
-                    f"{r['wall_s']:8.1f}")
-            print(line)
-            if out is not None:
-                out.append(f"streaming/{scenario}/qw{qw},"
-                           f"{1e3 * r['lat_mean_ms']:.1f},"
-                           f"{r['jobs_per_s']:.0f} jobs/s")
+    grid = [(sc, qw) for sc in SCENARIOS for qw in QUEUE_WINDOWS]
+    grid.append(DEEP_QUEUE)
+    results: dict[str, dict] = {}
+    for scenario, qw in grid:
+        r = stream_once(scenario, qw)
+        assert r["completed"] == NUM_JOBS, (scenario, qw, r["completed"])
+        results[f"{scenario}/qw{qw}"] = r
+        line = (f"{scenario:12s} {qw:5d} {r['jobs_per_s']:8.0f} "
+                f"{r['decisions']:7d} {r['lat_mean_ms']:7.2f}ms "
+                f"{r['lat_p99_ms']:6.2f}ms {r['util_mean']:5.2f} "
+                f"{r['wait_p99_h']:8.1f} {r['peak_queue']:6d} "
+                f"{r['wall_s']:8.1f}")
+        print(line)
+        if out is not None:
+            # decision latency stays in milliseconds end to end (the seed
+            # multiplied lat_mean_ms by 1e3 into a field read as ms)
+            out.append(f"streaming/{scenario}/qw{qw}/lat_ms,"
+                       f"{r['lat_mean_ms']:.3f},"
+                       f"{r['jobs_per_s']:.0f} jobs/s")
+    doc = _emit_json(results)
+    print(f"# wrote {os.path.normpath(JSON_PATH)}")
+    if doc["speedup_vs_pre_pr"]:
+        pretty = ", ".join(f"{k} {v:.1f}x"
+                           for k, v in sorted(doc["speedup_vs_pre_pr"].items()))
+        print(f"# decision-latency speedup vs pre-PR baseline: {pretty}")
+    if doc["deep_queue_latency_growth"] is not None:
+        g = doc["deep_queue_latency_growth"]
+        print(f"# deep-queue growth {DEEP_QUEUE[0]} "
+              f"qw{g['ref_queue_window']}->qw{DEEP_QUEUE[1]}: "
+              f"latency x{g['latency_ratio']:.2f} over window x{g['window_ratio']:.0f} "
+              f"({'sub-linear' if g['sublinear'] else 'SUPER-linear'})")
 
 
 if __name__ == "__main__":

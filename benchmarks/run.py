@@ -1,12 +1,16 @@
 """Benchmark driver — one module per paper table/figure.
 
 Prints human-readable tables plus ``name,us_per_call,derived`` CSV rows at
-the end.  Module selection: ``python -m benchmarks.run [module ...]`` with
-modules in {latency, kernels, roofline, naive, qssf, util, transfer,
-policies}.  REPRO_BENCH_SCALE=full for paper-scale runs.
+the end.  Modules may additionally expose a ``JSON_PATH`` machine-readable
+artifact (e.g. ``BENCH_streaming.json``) that is listed in the run summary
+so cross-PR perf tracking knows where to look.  Module selection:
+``python -m benchmarks.run [module ...]`` with modules in {latency, kernels,
+roofline, naive, qssf, util, transfer, policies, streaming}.
+REPRO_BENCH_SCALE=full for paper-scale runs.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -17,6 +21,7 @@ MODULES = ("latency", "kernels", "roofline", "variability", "naive", "qssf",
 def main() -> None:
     want = sys.argv[1:] or list(MODULES)
     rows: list[str] = []
+    artifacts: list[str] = []
     t0 = time.time()
     special = {"roofline": "benchmarks.roofline",
                "naive": "benchmarks.bench_naive_vs_pro"}
@@ -25,6 +30,7 @@ def main() -> None:
         mod = __import__(modname, fromlist=["run"])
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         t1 = time.time()
+        ok = True
         try:
             mod.run(rows)
         except Exception as e:  # noqa: BLE001
@@ -32,11 +38,19 @@ def main() -> None:
             traceback.print_exc()
             print(f"[bench {name} FAILED] {e!r}")
             rows.append(f"{name}/FAILED,0,{e!r}")
+            ok = False
+        path = getattr(mod, "JSON_PATH", None)
+        # only report the artifact on success — a stale file from a prior
+        # run must not be ingested as this run's numbers
+        if ok and path and os.path.exists(path):
+            artifacts.append(os.path.normpath(path))
         print(f"-- {name} done in {time.time() - t1:.0f}s")
 
     print(f"\n{'=' * 72}\n== CSV (name,us_per_call,derived)\n{'=' * 72}")
     for r in rows:
         print(r)
+    for a in artifacts:
+        print(f"# json artifact: {a}")
     print(f"# total bench time {time.time() - t0:.0f}s")
 
 

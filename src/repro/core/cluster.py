@@ -7,6 +7,21 @@ across nodes, and enumerates candidate placements ("ways") for a job:
 - way2 "pack":   prefer most-loaded nodes that still fit (utilization)
 
 The MILP module (Algorithm 1 of the paper) chooses between them.
+
+Versioned feasibility cache
+---------------------------
+Every mutation (``allocate`` / ``release`` / ``fail_node`` / ``recover_node``
+/ ``load_from``) bumps ``version``.  With ``cache=True`` the placement
+queries (``find_placement`` / ``candidate_ways`` / ``can_schedule_now``),
+the SKU eligibility masks, and the per-SKU free-GPU tallies are memoized per
+(job shape, version): between two mutations a saturated scheduler re-asks the
+same feasibility questions for the whole queue window, and every repeat is a
+dict hit instead of a placement search.  Job "shape" is the tuple of fields
+placement actually depends on: ``(num_gpus, gpu_type, req_cpus, req_mem_gb)``.
+
+Caching is opt-out by default because callers that mutate the resource arrays
+directly (some tests do) would otherwise read stale entries; the scheduler
+engine owns its ``ClusterState`` and constructs it with ``cache=True``.
 """
 from __future__ import annotations
 
@@ -16,38 +31,112 @@ from repro.core.types import ClusterSpec, Job
 
 Placement = dict[int, int]  # node_id -> gpus taken
 
+_MISS = object()   # cache sentinel (cached values may legitimately be None)
+
+
+def _job_shape(job: Job) -> tuple:
+    """The fields placement feasibility depends on — the cache key."""
+    return (job.num_gpus, job.gpu_type, job.req_cpus, job.req_mem_gb)
+
 
 class ClusterState:
     """Mutable multi-resource state of a heterogeneous cluster."""
 
-    def __init__(self, spec: ClusterSpec):
+    def __init__(self, spec: ClusterSpec, cache: bool = False):
         self.spec = spec
         n = len(spec.nodes)
         self.free_gpus = np.array([nd.num_gpus for nd in spec.nodes], dtype=np.int64)
         self.free_cpus = np.array([nd.num_cpus for nd in spec.nodes], dtype=np.int64)
         self.free_mem = np.array([nd.mem_gb for nd in spec.nodes], dtype=np.float64)
-        self.gpu_types = [nd.gpu_type for nd in spec.nodes]
+        self.gpu_types = np.array([nd.gpu_type for nd in spec.nodes])
         self.speeds = np.array([nd.speed for nd in spec.nodes], dtype=np.float64)
         self.total_gpus = np.array([nd.num_gpus for nd in spec.nodes], dtype=np.int64)
         self.node_down = np.zeros(n, dtype=bool)   # fault injection
+        # static per-SKU node-index masks (node SKUs never change at runtime)
+        self._sku_masks: dict[str, np.ndarray] = {
+            t: self.gpu_types == t for t in set(str(t) for t in self.gpu_types)}
+        self._all_mask = np.ones(n, dtype=bool)
+        self._no_mask = np.zeros(n, dtype=bool)
+        self._total_by_type = {t: int(self.total_gpus[m].sum())
+                               for t, m in self._sku_masks.items()}
+        # version counters: `version` bumps on every mutation; `topo_version`
+        # only when node up/down topology changes (eligibility masks depend
+        # solely on topology, not on free-resource levels)
+        self.version = 0
+        self.topo_version = 0
+        self.cache_enabled = bool(cache)
+        self._placement_cache: dict[tuple, Placement | None] = {}
+        self._ways_cache: dict[tuple, list[Placement]] = {}
+        self._eligible_cache: dict[str, np.ndarray] = {}
+        self._tallies: tuple[int, dict[str, int]] | None = None
+
+    # ---------------------------------------------------------------- caching --
+    def _bump(self) -> None:
+        self.version += 1
+        if self._placement_cache:
+            self._placement_cache.clear()
+        if self._ways_cache:
+            self._ways_cache.clear()
+        self._tallies = None
+
+    def _bump_topology(self) -> None:
+        self.topo_version += 1
+        if self._eligible_cache:
+            self._eligible_cache.clear()
+        self._bump()
+
+    def load_from(self, other: "ClusterState") -> None:
+        """Copy the mutable resource state of ``other`` in place (scratch
+        reuse for what-if simulation) and invalidate all caches."""
+        np.copyto(self.free_gpus, other.free_gpus)
+        np.copyto(self.free_cpus, other.free_cpus)
+        np.copyto(self.free_mem, other.free_mem)
+        np.copyto(self.node_down, other.node_down)
+        self._bump_topology()
 
     # ------------------------------------------------------------------ queries --
+    def eligible_mask(self, gpu_type: str) -> np.ndarray:
+        """Boolean mask of up nodes whose SKU satisfies ``gpu_type``.
+        Callers must treat the returned array as read-only."""
+        if self.cache_enabled:
+            m = self._eligible_cache.get(gpu_type)
+            if m is None:
+                m = self._compute_eligible(gpu_type)
+                self._eligible_cache[gpu_type] = m
+            return m
+        return self._compute_eligible(gpu_type)
+
+    def _compute_eligible(self, gpu_type: str) -> np.ndarray:
+        base = self._all_mask if gpu_type == "any" \
+            else self._sku_masks.get(gpu_type, self._no_mask)
+        return base & ~self.node_down
+
     def nodes_for(self, job: Job) -> np.ndarray:
         """Boolean mask of nodes whose SKU satisfies the job's request and are up."""
-        ok = np.array([job.gpu_type in ("any", t) for t in self.gpu_types])
-        return ok & ~self.node_down
+        return self.eligible_mask(job.gpu_type)
+
+    def free_gpu_tallies(self) -> tuple[int, dict[str, int]]:
+        """``(total_free_on_up_nodes, {sku: free_gpus_on_up_nodes})`` —
+        cached per version so saturated-queue prefilters are O(1)."""
+        if self.cache_enabled and self._tallies is not None:
+            return self._tallies
+        up = ~self.node_down
+        total = int(self.free_gpus[up].sum())
+        by_type = {t: int(self.free_gpus[m & up].sum())
+                   for t, m in self._sku_masks.items()}
+        tallies = (total, by_type)
+        if self.cache_enabled:
+            self._tallies = tallies
+        return tallies
 
     def free_gpus_of_type(self, gpu_type: str) -> int:
-        if gpu_type == "any":
-            return int(self.free_gpus[~self.node_down].sum())
-        idx = [i for i, t in enumerate(self.gpu_types)
-               if t == gpu_type and not self.node_down[i]]
-        return int(self.free_gpus[idx].sum())
+        total, by_type = self.free_gpu_tallies()
+        return total if gpu_type == "any" else by_type.get(gpu_type, 0)
 
     def total_gpus_of_type(self, gpu_type: str) -> int:
         if gpu_type == "any":
             return int(self.total_gpus.sum())
-        return int(sum(g for g, t in zip(self.total_gpus, self.gpu_types) if t == gpu_type))
+        return self._total_by_type.get(gpu_type, 0)
 
     def _fits_node(self, job: Job, i: int, gpus: int) -> bool:
         """Would `gpus` GPUs of `job` fit on node i respecting CPU/mem coupling?"""
@@ -64,6 +153,18 @@ class ClusterState:
     def find_placement(self, job: Job, mode: str = "pack") -> Placement | None:
         """Greedy gang placement. mode: 'pack' (most-loaded-first) or
         'spread' (least-loaded-first / fewest co-tenants)."""
+        if self.cache_enabled:
+            key = (job.num_gpus, job.gpu_type, job.req_cpus, job.req_mem_gb,
+                   mode)
+            hit = self._placement_cache.get(key, _MISS)
+            if hit is not _MISS:
+                return hit
+            p = self._find_placement(job, mode)
+            self._placement_cache[key] = p
+            return p
+        return self._find_placement(job, mode)
+
+    def _find_placement(self, job: Job, mode: str) -> Placement | None:
         eligible = self.nodes_for(job)
         order = np.argsort(self.free_gpus if mode == "pack" else -self.free_gpus,
                            kind="stable")
@@ -83,6 +184,17 @@ class ClusterState:
 
     def candidate_ways(self, job: Job) -> list[Placement]:
         """Distinct candidate placements (spread & pack at minimum)."""
+        if self.cache_enabled:
+            key = _job_shape(job)
+            hit = self._ways_cache.get(key, _MISS)
+            if hit is not _MISS:
+                return hit
+            ways = self._candidate_ways(job)
+            self._ways_cache[key] = ways
+            return ways
+        return self._candidate_ways(job)
+
+    def _candidate_ways(self, job: Job) -> list[Placement]:
         ways: list[Placement] = []
         for mode in ("spread", "pack"):
             p = self.find_placement(job, mode)
@@ -103,21 +215,34 @@ class ClusterState:
 
     # -------------------------------------------------------------- mutation ----
     def allocate(self, job: Job, placement: Placement) -> None:
+        # validate the whole gang before mutating anything: a mid-loop
+        # failure must not leave a partially-decremented cluster behind a
+        # still-valid cache version (guards are RuntimeErrors, not asserts,
+        # so they survive `python -O`)
         for i, g in placement.items():
             frac = g / max(job.num_gpus, 1)
-            assert self.free_gpus[i] >= g, "GPU oversubscription"
+            if self.free_gpus[i] < g:
+                raise RuntimeError(f"GPU oversubscription on node {i}")
+            if (self.free_cpus[i] < round(job.req_cpus * frac)
+                    or self.free_mem[i] < job.req_mem_gb * frac - 1e-9):
+                raise RuntimeError(f"CPU/mem oversubscription on node {i}")
+        for i, g in placement.items():
+            frac = g / max(job.num_gpus, 1)
             self.free_gpus[i] -= g
             self.free_cpus[i] -= round(job.req_cpus * frac)
             self.free_mem[i] -= job.req_mem_gb * frac
-            assert self.free_cpus[i] >= 0 and self.free_mem[i] >= -1e-9
+        self._bump()
 
     def release(self, job: Job, placement: Placement) -> None:
+        for i, g in placement.items():
+            if self.free_gpus[i] + g > self.total_gpus[i]:
+                raise RuntimeError(f"double release on node {i}")
         for i, g in placement.items():
             frac = g / max(job.num_gpus, 1)
             self.free_gpus[i] += g
             self.free_cpus[i] += round(job.req_cpus * frac)
             self.free_mem[i] += job.req_mem_gb * frac
-            assert self.free_gpus[i] <= self.total_gpus[i], "double release"
+        self._bump()
 
     def placement_speed(self, placement: Placement) -> float:
         """Effective speed of a gang placement = slowest member SKU."""
@@ -126,9 +251,11 @@ class ClusterState:
     # ------------------------------------------------------------------ faults --
     def fail_node(self, node_id: int) -> None:
         self.node_down[node_id] = True
+        self._bump_topology()
 
     def recover_node(self, node_id: int) -> None:
         self.node_down[node_id] = False
+        self._bump_topology()
 
     # ------------------------------------------------------------------ stats ---
     def utilization(self) -> float:

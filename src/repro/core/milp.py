@@ -106,11 +106,14 @@ def _solve_milp(
     lb = np.zeros(nvar)
     ub = np.ones(nvar)
     integrality = np.ones(nvar)
-    # y are integer GPU counts, bounded by node free GPUs and job demand
+    # y are integer GPU counts, bounded by node free GPUs and job demand;
+    # nodes_for hits the cluster's topology-versioned eligibility cache and
+    # the bound row is computed vectorized instead of per-node
     for k, lj in enumerate(lookahead):
         elig = cluster.nodes_for(lj)
-        for i in range(n_nodes):
-            ub[yvar(k, i)] = min(cluster.free_gpus[i], lj.num_gpus) if elig[i] else 0
+        y0 = yvar(k, 0)
+        ub[y0:y0 + n_nodes] = np.where(
+            elig, np.minimum(cluster.free_gpus, lj.num_gpus), 0)
 
     A_rows, lbs, ubs = [], [], []
 

@@ -23,25 +23,108 @@ Observers can attach hook objects (see ``EngineHooks``) to receive job
 start/finish/requeue callbacks and per-event-batch ticks — this is how
 ``repro.sched.telemetry`` builds rolling-window metrics without perturbing
 the schedule.
+
+Decision-loop complexity
+------------------------
+The default (``optimized=True``) hot path keeps per-event cost near
+O(log n) amortized in the pending-queue depth n:
+
+- ``pending`` is an **indexed queue**: a list maintained sorted by
+  ``(submit_time, job_id)`` via ``bisect`` — insertion is O(log n)
+  comparisons (plus a C-level memmove), window extraction is an O(window)
+  slice, and removal locates the job by bisection instead of a linear scan.
+  The naive path re-sorted the whole list and ``.remove()``'d per decision.
+- The cluster carries a **version counter** (see ``repro.core.cluster``)
+  bumped on allocate/release/fail_node/recover_node; per-SKU free-GPU
+  tallies and per-job-shape ``can_schedule_now`` / ``candidate_ways``
+  feasibility are memoized per version, so saturated clusters and repeated
+  backfill scans answer repeated placement questions from a dict.
+- ``_earliest_start`` reuses one scratch ``ClusterState`` instead of
+  allocating four numpy arrays per backfill reservation.
+- ``PolicyPrioritizer`` scores the window with one ``score_batch`` call
+  (numpy, bit-identical to the scalar loop) instead of a Python loop.
+
+``optimized=False`` retains the seed's naive loop — re-sort + linear scans,
+no caches, scalar scoring — as the reference for differential equivalence
+tests; both paths must produce bit-identical schedules.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import itertools
 import math
 from typing import Iterable
 
+import numpy as np
+
 from repro.core.cluster import ClusterState, Placement
 from repro.core.faults import FaultInjector, FaultModel
 from repro.core.metrics import BatchResult
 from repro.core.milp import choose_allocation
-from repro.core.prioritizer import PolicyPrioritizer, Prioritizer
+from repro.core.prioritizer import (PolicyPrioritizer, Prioritizer,
+                                    WindowFields)
 from repro.core.types import ClusterSpec, Job, JobState
 
 #: Pending-queue window handed to the prioritizer each decision (the seed
 #: hard-coded ``10 * 256``; now a configurable engine parameter).
 DEFAULT_QUEUE_WINDOW = 10 * 256
+
+
+def _pending_key(job: Job) -> tuple[float, int]:
+    return (job.submit_time, job.job_id)
+
+
+class _PendingFieldIndex:
+    """Contiguous float64 field arrays mirroring the sorted pending queue.
+
+    Inserts/removals memmove the suffix (C-speed, amortized cheap next to
+    the O(window) Python work they replace); the ranking window is then a
+    free O(1) slice view per field, so batch scoring never re-gathers job
+    attributes.  ``num_gpus`` is stored as float64 — exact for any
+    realistic GPU count (< 2**53)."""
+
+    __slots__ = ("n", "_cap", "_st", "_rt", "_est", "_gpus")
+
+    def __init__(self, cap: int = 256):
+        self.n = 0
+        self._cap = cap
+        self._st = np.empty(cap, dtype=np.float64)
+        self._rt = np.empty(cap, dtype=np.float64)
+        self._est = np.empty(cap, dtype=np.float64)
+        self._gpus = np.empty(cap, dtype=np.float64)
+
+    def _arrays(self):
+        return (self._st, self._rt, self._est, self._gpus)
+
+    def insert(self, idx: int, job: Job) -> None:
+        n = self.n
+        if n == self._cap:
+            self._cap *= 2
+            grown = []
+            for a in self._arrays():
+                g = np.empty(self._cap, dtype=np.float64)
+                g[:n] = a[:n]
+                grown.append(g)
+            self._st, self._rt, self._est, self._gpus = grown
+        for a, v in zip(self._arrays(),
+                        (job.submit_time, job.runtime, job.est_runtime,
+                         job.num_gpus)):
+            a[idx + 1:n + 1] = a[idx:n]
+            a[idx] = v
+        self.n = n + 1
+
+    def remove(self, idx: int) -> None:
+        n = self.n
+        for a in self._arrays():
+            a[idx:n - 1] = a[idx + 1:n]
+        self.n = n - 1
+
+    def window(self, w: int) -> WindowFields:
+        w = min(w, self.n)
+        return WindowFields(self._st[:w], self._rt[:w], self._est[:w],
+                            self._gpus[:w])
 
 
 class EngineHooks:
@@ -86,6 +169,10 @@ class SchedulerEngine:
     (cluster allocation, pending queue, running set, fault timeline) persists
     across calls, so a driver can interleave submission and stepping
     indefinitely without restarting the cluster.
+
+    ``optimized`` selects the indexed-queue + feasibility-cache hot path
+    (default); ``optimized=False`` runs the retained naive reference loop.
+    Both produce bit-identical schedules.
     """
 
     def __init__(
@@ -101,6 +188,7 @@ class SchedulerEngine:
         max_sim_time: float = 90 * 86400.0,
         queue_window: int | None = None,   # None = DEFAULT_QUEUE_WINDOW
         hooks: Iterable[EngineHooks] = (),
+        optimized: bool = True,
     ):
         self.spec = spec
         self.prioritizer = prioritizer
@@ -113,10 +201,14 @@ class SchedulerEngine:
         self.queue_window = (queue_window if queue_window is not None
                              else DEFAULT_QUEUE_WINDOW)
         self.hooks: list[EngineHooks] = list(hooks)
+        self.optimized = optimized
 
-        self.cluster = ClusterState(spec)
+        self.cluster = ClusterState(spec, cache=optimized)
         self._seq = itertools.count()
         self._events: list[tuple[float, int, str, object]] = []
+        #: pending queue; in optimized mode kept sorted by (submit_time,
+        #: job_id) at all times (indexed queue), in naive mode re-sorted
+        #: inside ``_try_schedule`` exactly like the seed loop
         self.pending: list[Job] = []
         # job_id -> [job, placement, start, finish, speed]
         self.running: dict[int, list] = {}
@@ -132,6 +224,9 @@ class SchedulerEngine:
         self.t0: float | None = None
         self.submitted = 0
         self._injector: FaultInjector | None = None
+        self._scratch: ClusterState | None = None   # _earliest_start reuse
+        self._pindex = _PendingFieldIndex() if optimized else None
+        self._rank_window = getattr(prioritizer, "rank_window", None)
         # runaway guard: budget grows with submissions / injected faults,
         # matching the seed's `200 * len(jobs) + 10_000 + 4 * faults` bound
         self._guard = 0
@@ -191,6 +286,28 @@ class SchedulerEngine:
             backfills=self.backfills, restarts=self.restarts,
         )
 
+    # ------------------------------------------------------ pending queue ----
+    def _push_pending(self, job: Job) -> None:
+        if self.optimized:
+            idx = bisect.bisect_right(self.pending, _pending_key(job),
+                                      key=_pending_key)
+            self.pending.insert(idx, job)
+            self._pindex.insert(idx, job)
+        else:
+            self.pending.append(job)
+
+    def _remove_pending(self, job: Job) -> None:
+        if self.optimized:
+            idx = bisect.bisect_left(self.pending, _pending_key(job),
+                                     key=_pending_key)
+            # job_ids are unique, so bisection lands exactly on `job`
+            if not (idx < len(self.pending) and self.pending[idx] is job):
+                idx = self.pending.index(job)   # defensive: keep index in sync
+            del self.pending[idx]
+            self._pindex.remove(idx)
+            return
+        self.pending.remove(job)
+
     # ------------------------------------------------------------ stepping ----
     def step(self, until: float = math.inf, max_events: int | None = None) -> int:
         """Process event batches with timestamp <= ``until``; returns how many
@@ -201,7 +318,13 @@ class SchedulerEngine:
             if max_events is not None and processed >= max_events:
                 break
             self._guard += 1
-            assert self._guard < self._guard_budget, "scheduler engine stuck"
+            if self._guard >= self._guard_budget:
+                # a real error, not an assert: must survive `python -O`
+                raise RuntimeError(
+                    f"scheduler engine stuck: processed {self._guard} event "
+                    f"batches against a budget of {self._guard_budget} "
+                    f"({self.submitted} submitted, {len(self.completed)} "
+                    f"completed)")
             now, _, kind, payload = heapq.heappop(self._events)
             self.now = now
             # fold in all events at the same instant
@@ -212,7 +335,7 @@ class SchedulerEngine:
             self._handle_faults()
             for k, p in batch_evts:
                 if k == "arrival":
-                    self.pending.append(p)
+                    self._push_pending(p)
                 elif k == "finish":
                     jid = p
                     rec = self.running.get(jid)
@@ -295,6 +418,24 @@ class SchedulerEngine:
 
     # -- EASY backfill: earliest start for the reserved job -----------------
     def _earliest_start(self, job: Job) -> float:
+        if not self.optimized:
+            return self._earliest_start_naive(job)
+        if self._scratch is None:
+            self._scratch = ClusterState(self.spec, cache=True)
+        sim = self._scratch
+        sim.load_from(self.cluster)
+        if sim.find_placement(job, "pack") is not None:
+            return self.now
+        for jid, (rj, pl, st, fin, sp) in sorted(self.running.items(),
+                                                 key=lambda kv: kv[1][3]):
+            sim.release(rj, pl)
+            if sim.find_placement(job, "pack") is not None:
+                return fin
+        return float("inf")
+
+    def _earliest_start_naive(self, job: Job) -> float:
+        """Seed implementation: fresh ClusterState (four array allocations)
+        per reservation.  Retained as the differential reference."""
         cluster = self.cluster
         sim = ClusterState(self.spec)
         sim.free_gpus = cluster.free_gpus.copy()
@@ -326,7 +467,7 @@ class SchedulerEngine:
         job.placement = None
         job.restarts += 1
         self.restarts += 1
-        self.pending.append(job)
+        self._push_pending(job)
         for h in self.hooks:
             h.on_requeue(job, self.now)
 
@@ -378,11 +519,29 @@ class SchedulerEngine:
             heapq.heappush(self._events,
                            (rec[3], next(self._seq), "finish", jid))
 
+    # ------------------------------------------------------ schedulability ----
     def _any_schedulable(self, queue: list[Job]) -> bool:
         """Same boolean as ``any(can_schedule_now(j) for j in queue)`` but
         with a cheap necessary-condition prefilter (enough free GPUs of the
         requested SKU on up nodes) so saturated clusters skip the expensive
-        placement search for the whole window."""
+        placement search for the whole window.  On the optimized path the
+        per-SKU tallies and per-shape feasibility come from the cluster's
+        version-keyed cache, so repeat scans cost one dict hit per job."""
+        if not self.optimized:
+            return self._any_schedulable_naive(queue)
+        cluster = self.cluster
+        free_any, free_by_type = cluster.free_gpu_tallies()
+        if free_any == 0:
+            return False
+        can = cluster.can_schedule_now
+        for j in queue:
+            avail = free_any if j.gpu_type == "any" \
+                else free_by_type.get(j.gpu_type, 0)
+            if avail >= j.num_gpus and can(j):
+                return True
+        return False
+
+    def _any_schedulable_naive(self, queue: list[Job]) -> bool:
         cluster = self.cluster
         up = ~cluster.node_down
         free_any = int(cluster.free_gpus[up].sum())
@@ -399,7 +558,57 @@ class SchedulerEngine:
                 return True
         return False
 
+    # ---------------------------------------------------------- scheduling ----
     def _try_schedule(self) -> None:
+        if not self.optimized:
+            return self._try_schedule_naive()
+        cluster, prioritizer = self.cluster, self.prioritizer
+        rank_window = self._rank_window
+        while self.pending:
+            # pending is maintained sorted by (submit_time, job_id): window
+            # extraction is a slice, no re-sort
+            queue = self.pending[: self.queue_window]
+            if not self._any_schedulable(queue):
+                return
+            if rank_window is not None:
+                order = rank_window(queue, cluster, self.now,
+                                    self._pindex.window(self.queue_window))
+            else:
+                order = prioritizer.rank(queue, cluster, self.now)
+            self.decisions += 1
+            top = queue[order[0]]
+            rest = [queue[i] for i in order[1:1 + self.lookahead_k]]
+            placement = self._alloc_for(top, rest)
+            if placement is not None:
+                self._remove_pending(top)
+                self._start_job(top, placement)
+                continue
+            if not self.backfill:
+                return
+            # EASY backfill under reservation for `top`
+            t_res = self._earliest_start(top)
+            progressed = False
+            for i in order[1:]:
+                cand = queue[i]
+                if cand.state != JobState.PENDING or cand is top:
+                    continue
+                if self.now + self._est_rt(cand) > t_res:
+                    continue
+                pl = self._alloc_for(cand, [])
+                if pl is not None:
+                    self._remove_pending(cand)
+                    self._start_job(cand, pl)
+                    self.backfills += 1
+                    progressed = True
+            if not progressed:
+                return
+            # after backfills the reserved job may now fit; loop again
+            if not cluster.can_schedule_now(top):
+                return
+
+    def _try_schedule_naive(self) -> None:
+        """Seed decision loop: full re-sort + linear `.remove()` per decision.
+        Retained verbatim as the reference for differential equivalence."""
         cluster, prioritizer = self.cluster, self.prioritizer
         while self.pending:
             self.pending.sort(key=lambda j: (j.submit_time, j.job_id))

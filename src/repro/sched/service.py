@@ -108,6 +108,7 @@ def run_stream(
     telemetry: RollingTelemetry | None = None,
     chunked_submit: bool = False,
     hooks: tuple[EngineHooks, ...] = (),
+    optimized: bool = True,
 ) -> StreamResult:
     """Replay ``jobs`` through a fresh engine in rescan-interval windows.
 
@@ -120,7 +121,7 @@ def run_stream(
     engine = SchedulerEngine(
         spec, prioritizer, allocator=allocator, backfill=backfill,
         lookahead_k=lookahead_k, fault_model=fault_model,
-        queue_window=queue_window, hooks=all_hooks)
+        queue_window=queue_window, hooks=all_hooks, optimized=optimized)
     if isinstance(prioritizer, QuotaPrioritizer):
         prioritizer.engine = engine
 

@@ -1,0 +1,197 @@
+"""Version-counter correctness of the ClusterState feasibility cache.
+
+Every mutation (allocate / release / fail_node / recover_node / load_from)
+must invalidate cached ``can_schedule_now`` / ``candidate_ways`` /
+``find_placement`` results and the per-SKU free-GPU tallies — a stale hit
+would let the engine schedule onto resources that no longer exist (or miss
+resources that just freed up)."""
+import numpy as np
+import pytest
+
+from repro.core import ClusterState, Job, make_cluster
+
+
+def mk_job(i, gpus, gpu_type="any"):
+    return Job(job_id=i, user=0, submit_time=0.0, runtime=100.0,
+               est_runtime=100.0, num_gpus=gpus, gpu_type=gpu_type)
+
+
+def cached():
+    return ClusterState(make_cluster("helios"), cache=True)
+
+
+def uncached():
+    return ClusterState(make_cluster("helios"))
+
+
+def test_version_bumps_on_every_mutation():
+    c = cached()
+    v0 = c.version
+    j = mk_job(0, 4)
+    p = c.find_placement(j, "pack")
+    assert c.version == v0                      # queries never bump
+    c.allocate(j, p)
+    v1 = c.version
+    assert v1 > v0
+    c.release(j, p)
+    v2 = c.version
+    assert v2 > v1
+    c.fail_node(0)
+    v3 = c.version
+    assert v3 > v2
+    c.recover_node(0)
+    assert c.version > v3
+
+
+def test_cache_hits_within_a_version():
+    c = cached()
+    j = mk_job(0, 4)
+    ways1 = c.candidate_ways(j)
+    ways2 = c.candidate_ways(j)
+    assert ways1 is ways2                       # memoized, not recomputed
+    p1 = c.find_placement(j, "pack")
+    p2 = c.find_placement(j, "pack")
+    assert p1 is p2
+    # a same-shape different job object hits the same entry
+    twin = mk_job(99, 4)
+    assert c.candidate_ways(twin) is ways1
+
+
+def test_allocate_release_invalidate_feasibility():
+    c = cached()
+    total = int(c.free_gpus.sum())
+    hog = mk_job(0, total)
+    assert c.can_schedule_now(hog)              # idle cluster fits everything
+    pl = c.find_placement(hog, "pack")
+    c.allocate(hog, pl)
+    assert not c.can_schedule_now(hog)          # stale True would be a bug
+    assert c.candidate_ways(hog) == []
+    small = mk_job(1, 1)
+    assert not c.can_schedule_now(small)
+    c.release(hog, pl)
+    assert c.can_schedule_now(hog)              # stale False would be a bug
+    assert c.can_schedule_now(small)
+    assert len(c.candidate_ways(hog)) >= 1
+
+
+def test_fail_node_invalidates_sku_feasibility():
+    """The fail_node mid-window case: a SKU-constrained job cached as
+    schedulable must flip to unschedulable when its only nodes go down."""
+    c = cached()
+    sku = str(c.gpu_types[0])
+    sku_nodes = [i for i, t in enumerate(c.gpu_types) if t == sku]
+    per_node = int(c.free_gpus[sku_nodes[0]])
+    j = mk_job(0, per_node, gpu_type=sku)
+    assert c.can_schedule_now(j)
+    assert len(c.candidate_ways(j)) >= 1
+    for i in sku_nodes:
+        c.fail_node(i)
+    assert not c.can_schedule_now(j)
+    assert c.candidate_ways(j) == []
+    assert c.free_gpus_of_type(sku) == 0        # tallies invalidated too
+    for i in sku_nodes:
+        c.recover_node(i)
+    assert c.can_schedule_now(j)
+    assert c.free_gpus_of_type(sku) == per_node * len(sku_nodes)
+
+
+def test_tallies_track_allocations():
+    c = cached()
+    free0, by_type0 = c.free_gpu_tallies()
+    j = mk_job(0, 4)
+    pl = c.find_placement(j, "pack")
+    c.allocate(j, pl)
+    free1, by_type1 = c.free_gpu_tallies()
+    assert free1 == free0 - 4
+    assert sum(by_type1.values()) == sum(by_type0.values()) - 4
+    c.release(j, pl)
+    assert c.free_gpu_tallies() == (free0, by_type0)
+
+
+def test_load_from_invalidates_scratch_cache():
+    """Scratch reuse in _earliest_start: load_from must flush the previous
+    what-if state's cache, or reservations would be computed against a
+    stale snapshot."""
+    src = cached()
+    scratch = ClusterState(make_cluster("helios"), cache=True)
+    total = int(src.free_gpus.sum())
+    hog = mk_job(0, total)
+    pl = src.find_placement(hog, "pack")
+    src.allocate(hog, pl)
+    scratch.load_from(src)
+    assert not scratch.can_schedule_now(mk_job(1, 1))
+    src.release(hog, pl)
+    scratch.load_from(src)
+    assert scratch.can_schedule_now(mk_job(1, 1))
+    np.testing.assert_array_equal(scratch.free_gpus, src.free_gpus)
+
+
+def test_cached_equals_uncached_after_mutation_storm():
+    """Randomized allocate/release/fail/recover sequence: the cached cluster
+    answers every feasibility query exactly like an uncached twin."""
+    rng = np.random.default_rng(7)
+    a, b = cached(), uncached()
+    live = []
+    probes = [mk_job(1000 + k, int(g)) for k, g in
+              enumerate(rng.integers(1, 17, 6))]
+    probes += [mk_job(2000, 4, gpu_type=str(a.gpu_types[0]))]
+    for step in range(200):
+        op = rng.integers(0, 4)
+        if op == 0:
+            j = mk_job(step, int(rng.integers(1, 9)))
+            p = a.find_placement(j, "pack")
+            assert p == b.find_placement(j, "pack")
+            if p is not None:
+                a.allocate(j, p)
+                b.allocate(j, p)
+                live.append((j, p))
+        elif op == 1 and live:
+            j, p = live.pop(int(rng.integers(0, len(live))))
+            a.release(j, p)
+            b.release(j, p)
+        elif op == 2:
+            n = int(rng.integers(0, len(a.node_down)))
+            if not a.node_down[n] and not any(n in p for _, p in live):
+                a.fail_node(n)
+                b.fail_node(n)
+        elif op == 3:
+            n = int(rng.integers(0, len(a.node_down)))
+            if a.node_down[n]:
+                a.recover_node(n)
+                b.recover_node(n)
+        for probe in probes:
+            assert a.can_schedule_now(probe) == b.can_schedule_now(probe)
+            assert a.candidate_ways(probe) == b.candidate_ways(probe)
+            assert a.free_gpus_of_type(probe.gpu_type) == \
+                b.free_gpus_of_type(probe.gpu_type)
+
+
+def test_unknown_sku_and_eligibility_masks():
+    c = cached()
+    ghost = mk_job(0, 1, gpu_type="TPUv9")
+    assert not c.can_schedule_now(ghost)
+    assert c.free_gpus_of_type("TPUv9") == 0
+    assert not c.nodes_for(ghost).any()
+    anyjob = mk_job(1, 1)
+    assert c.nodes_for(anyjob).sum() == len(c.gpu_types)
+    c.fail_node(0)
+    assert c.nodes_for(anyjob).sum() == len(c.gpu_types) - 1
+
+
+def test_oversubscription_raises_under_dash_O():
+    """The allocate guard is a RuntimeError, not an assert, so it survives
+    `python -O` — and a failed allocate must leave the cluster (and its
+    cache) exactly as it was: validation happens before any mutation."""
+    c = cached()
+    j = mk_job(0, 7)
+    free0 = c.free_gpus.copy()
+    v0 = c.version
+    assert c.can_schedule_now(j)
+    with pytest.raises(RuntimeError):
+        c.allocate(j, {0: int(c.free_gpus[0]) + 1})
+    np.testing.assert_array_equal(c.free_gpus, free0)
+    assert c.version == v0
+    assert c.can_schedule_now(j)
+    with pytest.raises(RuntimeError):            # double release guarded too
+        c.release(j, {0: 1})
+    np.testing.assert_array_equal(c.free_gpus, free0)

@@ -1,4 +1,5 @@
 import numpy as np
+import pytest
 
 from repro.core import BASE_POLICIES, Job, make_policy
 
@@ -71,3 +72,59 @@ def test_estimates_mode():
     j = mk(0, 0, 100, 1)
     j.est_runtime = 10_000.0
     assert p.score(j, 0) == 10_000.0
+
+
+def _random_jobs(seed, n=256):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for i in range(n):
+        j = Job(job_id=i, user=int(rng.integers(0, 9)),
+                submit_time=float(rng.uniform(0, 1e6)),
+                runtime=float(rng.lognormal(6, 2)) + 1.0,
+                est_runtime=float(rng.lognormal(6, 2)) + 1.0,
+                num_gpus=int(rng.integers(1, 65)),
+                vc=int(rng.integers(0, 8)))
+        jobs.append(j)
+    return jobs
+
+
+@pytest.mark.parametrize("name", BASE_POLICIES)
+@pytest.mark.parametrize("use_estimates", [False, True])
+def test_score_batch_bit_identical(name, use_estimates):
+    """score_batch must equal the scalar score loop BITWISE — numpy
+    transcendentals differ from math.* by ulps on SIMD builds, and a 1-ulp
+    score difference can flip an argsort and change the schedule."""
+    p = make_policy(name, use_estimates=use_estimates)
+    # give stateful policies (qssf, slurm-mf) some history first
+    for k in range(12):
+        p.observe_finish(mk(1000 + k, 0, float(10 ** (k % 5 + 1)), k % 4 + 1,
+                            user=k % 5))
+    for seed, now in ((0, 0.0), (1, 3600.0), (2, 2.5e6)):
+        jobs = _random_jobs(seed)
+        batch = p.score_batch(jobs, now)
+        scalar = np.asarray([p.score(j, now) for j in jobs])
+        assert batch.dtype == np.float64
+        np.testing.assert_array_equal(
+            batch, scalar,
+            err_msg=f"{name} score_batch diverges from scalar score")
+
+
+def test_score_batch_empty_window():
+    for name in BASE_POLICIES:
+        out = make_policy(name).score_batch([], 0.0)
+        assert len(out) == 0
+
+
+@pytest.mark.parametrize("name", BASE_POLICIES)
+def test_score_batch_fields_path_identical(name):
+    """The engine-maintained contiguous-field path must score exactly like
+    the attribute-gathering path (and hence like the scalar loop)."""
+    from repro.core.prioritizer import WindowFields
+    p = make_policy(name)
+    for k in range(8):
+        p.observe_finish(mk(500 + k, 0, 50.0 * (k + 1), k % 3 + 1, user=k % 4))
+    jobs = _random_jobs(3)
+    fields = WindowFields.from_jobs(jobs)
+    for now in (0.0, 7e5):
+        np.testing.assert_array_equal(p.score_batch(jobs, now, fields),
+                                      p.score_batch(jobs, now))

@@ -249,6 +249,48 @@ def test_chunked_scenario_service_equals_upfront():
     assert fins[0] == fins[1]
 
 
+def test_naive_reference_matches_seed_golden():
+    """The retained naive engine path (optimized=False, scalar scoring) is
+    the seed implementation and must still hit the golden aggregates."""
+    key = ("helios", 96, 0, "fcfs", "milp", True, False)
+    trace, n, seed, policy, allocator, backfill, _ = key
+    jobs = generate_trace(trace, n, seed=seed)
+    sim = Simulator(make_cluster(trace), allocator=allocator,
+                    backfill=backfill, optimized=False)
+    r = sim.run_batch([j.clone_pending() for j in jobs],
+                      PolicyPrioritizer(make_policy(policy), batch=False))
+    got = (r.makespan, r.total_wait, r.gpu_seconds_used, r.decisions,
+           r.milp_calls, r.backfills, r.restarts)
+    assert got == SEED_GOLDENS[key]
+
+
+def test_pending_queue_stays_sorted():
+    """Indexed-queue invariant: `pending` is sorted by (submit_time, job_id)
+    after every step, including requeues from faults."""
+    jobs = generate_trace("philly", 64, seed=3)
+    fm = FaultModel(mtbf_per_node=3 * 3600.0, repair_time=600.0, seed=1)
+    e = _make_engine(make_cluster("philly"), allocator="pack", fault_model=fm)
+    e.submit([j.clone_pending() for j in jobs])
+    checked = 0
+    while e._events:
+        e.step(e.next_event_time())
+        keys = [(j.submit_time, j.job_id) for j in e.pending]
+        assert keys == sorted(keys)
+        checked += 1
+    assert checked > 0 and e.done
+
+
+def test_guard_raises_runtime_error(helios_cluster):
+    """The runaway guard must be a RuntimeError (asserts vanish under
+    `python -O`)."""
+    jobs = generate_trace("helios", 32, seed=4)
+    e = _make_engine(helios_cluster, allocator="pack")
+    e.submit([j.clone_pending() for j in jobs])
+    e._guard_budget = 3
+    with pytest.raises(RuntimeError, match="stuck"):
+        e.drain()
+
+
 def test_fault_storm_restarts():
     sr = run_scenario("fault-storm", num_jobs=32, seed=1,
                       rescan_interval=600.0, allocator="pack")

@@ -5,7 +5,8 @@ the end.  Modules may additionally expose a ``JSON_PATH`` machine-readable
 artifact (e.g. ``BENCH_streaming.json``) that is listed in the run summary
 so cross-PR perf tracking knows where to look.  Module selection:
 ``python -m benchmarks.run [module ...]`` with modules in {latency, kernels,
-roofline, naive, qssf, util, transfer, policies, streaming}.
+roofline, variability, naive, qssf, util, transfer, policies, streaming,
+federation}.
 REPRO_BENCH_SCALE=full for paper-scale runs.
 """
 from __future__ import annotations
@@ -15,7 +16,7 @@ import sys
 import time
 
 MODULES = ("latency", "kernels", "roofline", "variability", "naive", "qssf",
-           "util", "transfer", "policies", "streaming")
+           "util", "transfer", "policies", "streaming", "federation")
 
 
 def main() -> None:

@@ -69,6 +69,7 @@ class ClusterState:
         self._ways_cache: dict[tuple, list[Placement]] = {}
         self._eligible_cache: dict[str, np.ndarray] = {}
         self._tallies: tuple[int, dict[str, int]] | None = None
+        self._up_ratios: tuple[float, float] | None = None
 
     # ---------------------------------------------------------------- caching --
     def _bump(self) -> None:
@@ -78,6 +79,7 @@ class ClusterState:
         if self._ways_cache:
             self._ways_cache.clear()
         self._tallies = None
+        self._up_ratios = None
 
     def _bump_topology(self) -> None:
         self.topo_version += 1
@@ -258,15 +260,48 @@ class ClusterState:
         self._bump_topology()
 
     # ------------------------------------------------------------------ stats ---
-    def utilization(self) -> float:
+    def _up_ratio_pair(self) -> tuple[float, float]:
+        """(utilization, fragmentation) over up nodes — memoized per version
+        so per-job snapshot refreshes during a routed burst (no cluster
+        mutation in between) are dict hits, not O(nodes) reductions."""
+        if self.cache_enabled and self._up_ratios is not None:
+            return self._up_ratios
+        up = ~self.node_down
+        tot = int(self.total_gpus[up].sum())
+        free = self.free_gpus[up]
+        total_free = float(free.sum())
+        util = (tot - total_free) / tot if tot > 0 else 0.0
+        frag = 0.0
+        if total_free > 0:
+            # sum of squares is maximal when all free GPUs sit on one node
+            frag = 1.0 - float((free.astype(np.float64) ** 2).sum()) \
+                / (total_free ** 2)
+        pair = (util, frag)
+        if self.cache_enabled:
+            self._up_ratios = pair
+        return pair
+
+    def utilization(self, up_only: bool = False) -> float:
+        """Busy-GPU fraction.  ``up_only`` restricts both numerator and
+        denominator to up nodes — the view a federation router should see,
+        where a fully-failed cluster reads 0.0 instead of dividing by its
+        vanished capacity.  Guarded against zero-GPU / empty clusters."""
+        if up_only:
+            return self._up_ratio_pair()[0]
         tot = int(self.total_gpus.sum())
         return float((self.total_gpus - self.free_gpus).sum() / max(tot, 1))
 
-    def fragmentation(self) -> float:
-        """Cluster Fragmentation Factor, Eq. (3) (normalized to [0, 1])."""
+    def fragmentation(self, up_only: bool = False) -> float:
+        """Cluster Fragmentation Factor, Eq. (3) (normalized to [0, 1]).
+        ``up_only`` ignores free GPUs stranded on down nodes (they are not
+        placeable, so they should not read as usable-but-fragmented).
+        Returns 0.0 for zero-free / zero-GPU / empty clusters."""
+        if up_only:
+            return self._up_ratio_pair()[1]
         total_free = float(self.free_gpus.sum())
         if total_free <= 0:
             return 0.0
         # sum of squares is maximal when all free GPUs sit on one node
-        conc = float((self.free_gpus.astype(np.float64) ** 2).sum()) / (total_free ** 2)
+        conc = float((self.free_gpus.astype(np.float64) ** 2).sum()) \
+            / (total_free ** 2)
         return 1.0 - conc

@@ -1,0 +1,352 @@
+"""Multi-cluster federation: a meta-scheduler over per-cluster engines.
+
+``FederatedScheduler`` owns N independent ``SchedulerEngine`` instances —
+one per cluster, each with its own ``ClusterSpec``, prioritizer, allocator,
+and fault model — and routes every arriving job to exactly one engine at
+submit time.  After routing, clusters never interact: engines advance in
+**lockstep rescan windows** (``step(until)`` steps every engine to the same
+time bound, the ``service.py`` windowed-stepping contract), so a fleet of N
+clusters behaves like N independent streams stitched together by the router.
+
+Two invariants make the layer cheap and predictable:
+
+- **Snapshot-only routing** (see ``repro.fed.router``): the router reads
+  static ``ClusterInfo`` plus the latest ``EngineSnapshot`` per cluster —
+  O(N) per job, independent of queue depth or cluster size.  The federation
+  refreshes the routed cluster's snapshot after each accepted job, so
+  burst arrivals within one window see their own effect on queue loads.
+- **Window-edge equivalence**: engines only advance inside ``step`` /
+  ``drain``, and scheduling happens at event instants, so *given a fixed
+  routing assignment* lockstep windowed stepping is exactly equivalent to
+  draining each engine independently.  A single-cluster federation with the
+  stateless ``hash`` router is therefore bit-identical to a bare
+  ``SchedulerEngine`` (pinned by differential tests).  Load-aware routers
+  legitimately route differently under different rescan cadences — the
+  snapshots they read evolve with the windows.
+
+Observability: each engine carries its own ``RollingTelemetry`` hook;
+``FleetSnapshot`` aggregates O(1) per-cluster snapshots (fleet utilization,
+cross-cluster Jain fairness, routed-job distribution) and ``result()``
+folds completed jobs into a ``FleetResult`` with fleet-wide JCT / wait
+percentiles and per-cluster ``BatchResult``s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.metrics import BatchResult
+from repro.core.policies import make_policy
+from repro.core.prioritizer import PolicyPrioritizer, Prioritizer
+from repro.core.types import ClusterSpec, Job
+from repro.fed.router import ClusterInfo, ClusterView, Router, make_router
+from repro.fed.scenarios import FleetRun, get_fleet_scenario
+from repro.sched.engine import EngineSnapshot, SchedulerEngine
+from repro.sched.service import QuotaPrioritizer, wrap_tenancy
+from repro.sched.telemetry import RollingTelemetry, jain_index
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSnapshot:
+    """O(1) fleet-wide view: per-cluster snapshots plus aggregates.
+
+    ``utilization`` is the capacity-weighted mean of per-cluster (up-node)
+    utilizations and ``fairness`` is Jain's index over them; both are
+    guarded so zero-GPU fleets and all-failed members yield finite values.
+    """
+
+    now: float
+    clusters: tuple
+    routed: tuple
+    submitted: int
+    num_pending: int
+    num_running: int
+    num_completed: int
+    free_gpus: int
+    utilization: float
+    fairness: float
+
+    @property
+    def in_flight(self) -> int:
+        return self.num_pending + self.num_running
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """End-of-run fleet aggregate over everything completed so far."""
+
+    per_cluster: list[BatchResult]
+    routed: list[int]
+    jobs: list[Job]                    # completed, fleet-wide
+    makespan: float
+    gpu_seconds_used: float
+    utilization: float                 # used / (fleet GPUs * makespan)
+    avg_jct: float
+    avg_wait: float
+    jct_p50: float
+    jct_p99: float
+    wait_p50: float
+    wait_p99: float
+    fairness: float                    # Jain over per-cluster GPU-seconds/GPU
+
+
+def _pct(arr: np.ndarray | None, q: float) -> float:
+    return float(np.percentile(arr, q)) if arr is not None and arr.size else 0.0
+
+
+class FederatedScheduler:
+    """Meta-scheduler routing a shared job stream across per-cluster engines.
+
+    ``prioritizer_factory(i)`` builds cluster ``i``'s prioritizer — engines
+    must never share prioritizer state (a ``QuotaPrioritizer``'s usage
+    tracking is per engine, so the factory is called once per cluster).
+    ``QuotaPrioritizer`` instances are wired exactly like ``run_stream``
+    does: attached as the engine's hook (incremental usage) and handed the
+    engine reference for the recompute reference path.
+    """
+
+    def __init__(
+        self,
+        clusters: Sequence[ClusterSpec],
+        router: Router | str = "jsq",
+        *,
+        prioritizer_factory: Callable[[int], Prioritizer] | None = None,
+        allocator: str = "milp",
+        backfill: bool = True,
+        lookahead_k: int = 8,
+        fault_models: Sequence | None = None,
+        queue_window: int | None = None,
+        telemetry: bool = True,
+        telemetry_window: float = 6 * 3600.0,
+        sample_interval: float = 600.0,
+        router_seed: int = 0,
+        optimized: bool = True,
+    ):
+        if not clusters:
+            raise ValueError("a federation needs at least one cluster")
+        fms = list(fault_models) if fault_models is not None \
+            else [None] * len(clusters)
+        if len(fms) != len(clusters):
+            raise ValueError(f"{len(clusters)} clusters but {len(fms)} "
+                             f"fault models")
+        self.router = make_router(router, seed=router_seed)
+        factory = prioritizer_factory or \
+            (lambda i: PolicyPrioritizer(make_policy("fcfs")))
+        self.engines: list[SchedulerEngine] = []
+        self.telemetries: list[RollingTelemetry | None] = []
+        for i, spec in enumerate(clusters):
+            pri = factory(i)
+            hooks: list = []
+            tel = None
+            if telemetry:
+                tel = RollingTelemetry(window=telemetry_window,
+                                       sample_interval=sample_interval)
+                hooks.append(tel)
+            if isinstance(pri, QuotaPrioritizer) and pri.incremental:
+                pri.reset_usage()
+                hooks.append(pri)
+            engine = SchedulerEngine(
+                spec, pri, allocator=allocator, backfill=backfill,
+                lookahead_k=lookahead_k, fault_model=fms[i],
+                queue_window=queue_window, hooks=hooks, optimized=optimized)
+            if isinstance(pri, QuotaPrioritizer):
+                pri.engine = engine
+            self.engines.append(engine)
+            self.telemetries.append(tel)
+        self.infos = [ClusterInfo.from_spec(i, spec)
+                      for i, spec in enumerate(clusters)]
+        self._views = [ClusterView(info, eng.snapshot())
+                       for info, eng in zip(self.infos, self.engines)]
+        self.routed = [0] * len(self.engines)
+        self.routes: dict[int, int] = {}        # job_id -> cluster index
+
+    # ------------------------------------------------------------- ingest ----
+    def submit(self, jobs: Iterable[Job]) -> int:
+        """Route each job to one engine at submit time (snapshot-only,
+        O(N clusters) per job).  Jobs are ingested in submit-time order —
+        the same normalization a single engine applies to a batch."""
+        batch = sorted(jobs, key=lambda j: j.submit_time)
+        for job in batch:
+            idx = self.router.route(job, self._views)
+            if not 0 <= idx < len(self.engines):
+                raise RuntimeError(
+                    f"router {self.router.name!r} returned cluster {idx} "
+                    f"for job {job.job_id} (fleet has {len(self.engines)})")
+            self.engines[idx].submit((job,))
+            self.routed[idx] += 1
+            self.routes[job.job_id] = idx
+            # refresh only the routed cluster's view: O(1), and the next
+            # job's routing sees this one in the queue load
+            self._views[idx] = ClusterView(self.infos[idx],
+                                           self.engines[idx].snapshot())
+        return len(batch)
+
+    # ------------------------------------------------------------ queries ----
+    @property
+    def done(self) -> bool:
+        return all(e.done for e in self.engines)
+
+    def next_event_time(self) -> float:
+        return min(e.next_event_time() for e in self.engines)
+
+    def snapshot(self) -> FleetSnapshot:
+        snaps = tuple(e.snapshot() for e in self.engines)
+        total_cap = sum(info.total_gpus for info in self.infos)
+        util = 0.0
+        if total_cap > 0:
+            util = sum(s.utilization * info.total_gpus
+                       for s, info in zip(snaps, self.infos)) / total_cap
+        return FleetSnapshot(
+            now=max(e.now for e in self.engines),
+            clusters=snaps,
+            routed=tuple(self.routed),
+            submitted=sum(s.submitted for s in snaps),
+            num_pending=sum(s.num_pending for s in snaps),
+            num_running=sum(s.num_running for s in snaps),
+            num_completed=sum(s.num_completed for s in snaps),
+            free_gpus=sum(s.free_gpus for s in snaps),
+            utilization=util,
+            fairness=jain_index([s.utilization for s in snaps]),
+        )
+
+    # ----------------------------------------------------------- stepping ----
+    def step(self, until: float = math.inf) -> int:
+        """Advance every engine in lockstep to ``until`` (one rescan
+        window); returns total event batches processed."""
+        processed = sum(e.step(until) for e in self.engines)
+        self._refresh_views()
+        return processed
+
+    def drain(self) -> int:
+        """Process every queued event on every engine (batch semantics) —
+        engines are independent after routing, so sequential drains equal
+        lockstep stepping."""
+        processed = sum(e.drain() for e in self.engines)
+        self._refresh_views()
+        return processed
+
+    def run_until_complete(self) -> int:
+        processed = 0
+        while not self.done and self.next_event_time() != math.inf:
+            processed += self.step(self.next_event_time())
+        return processed
+
+    def _refresh_views(self) -> None:
+        for i, eng in enumerate(self.engines):
+            self._views[i] = ClusterView(self.infos[i], eng.snapshot())
+
+    # ------------------------------------------------------------- result ----
+    def finalize_telemetry(self) -> None:
+        """Force an end-of-run sample on every cluster's telemetry."""
+        for tel, eng in zip(self.telemetries, self.engines):
+            if tel is not None:
+                tel.final(eng)
+
+    def result(self) -> FleetResult:
+        per = [e.result() for e in self.engines]
+        jobs = [j for e in self.engines for j in e.completed]
+        jcts = np.array([j.jct for j in jobs]) if jobs else None
+        waits = np.array([j.wait_time for j in jobs]) if jobs else None
+        t0 = min((e.t0 for e in self.engines if e.t0 is not None),
+                 default=0.0)
+        t_end = max((j.finish_time for j in jobs), default=t0)
+        makespan = t_end - t0
+        cap_gpus = sum(info.total_gpus for info in self.infos)
+        capacity = cap_gpus * max(makespan, 1e-9)
+        used = sum(r.gpu_seconds_used for r in per)
+        return FleetResult(
+            per_cluster=per, routed=list(self.routed), jobs=jobs,
+            makespan=makespan, gpu_seconds_used=used,
+            utilization=used / capacity if capacity > 0 else 0.0,
+            avg_jct=float(jcts.mean()) if jcts is not None else 0.0,
+            avg_wait=float(waits.mean()) if waits is not None else 0.0,
+            jct_p50=_pct(jcts, 50), jct_p99=_pct(jcts, 99),
+            wait_p50=_pct(waits, 50), wait_p99=_pct(waits, 99),
+            fairness=jain_index(
+                [r.gpu_seconds_used / max(info.total_gpus, 1)
+                 for r, info in zip(per, self.infos)]),
+        )
+
+
+# ----------------------------------------------------------------- drivers ----
+
+
+@dataclasses.dataclass
+class FleetStreamResult:
+    """Outcome of replaying a fleet stream through the federation."""
+
+    result: FleetResult
+    snapshot: FleetSnapshot
+    telemetries: list
+    windows: int
+    fed: FederatedScheduler
+
+
+def run_fleet(
+    run: FleetRun | str,
+    num_jobs: int = 1000,
+    seed: int = 0,
+    *,
+    router: Router | str = "jsq",
+    rescan_interval: float = 60.0,
+    allocator: str = "milp",
+    backfill: bool = True,
+    policy: str = "fcfs",
+    prioritizer_factory: Callable[[int], Prioritizer] | None = None,
+    queue_window: int | None = None,
+    telemetry_window: float = 6 * 3600.0,
+    sample_interval: float = 600.0,
+    router_seed: int = 0,
+    optimized: bool = True,
+) -> FleetStreamResult:
+    """Replay a fleet scenario (or a prebuilt ``FleetRun``) through a fresh
+    federation in lockstep rescan windows: each window's arrivals are routed
+    as the window opens, then every engine steps to the window edge.  Empty
+    multi-window gaps are hopped in one grid-aligned jump (same contract as
+    ``service.run_stream``).  The fleet's tenant metadata (SLA users, VC
+    quotas) wraps every cluster's prioritizer via ``wrap_tenancy``."""
+    if isinstance(run, str):
+        run = get_fleet_scenario(run).build(num_jobs, seed)
+    factory = prioritizer_factory or (
+        lambda i: wrap_tenancy(PolicyPrioritizer(make_policy(policy)),
+                               run.sla_users, run.vc_quotas))
+    fed = FederatedScheduler(
+        run.clusters, router, prioritizer_factory=factory,
+        allocator=allocator, backfill=backfill,
+        fault_models=run.fault_models, queue_window=queue_window,
+        telemetry_window=telemetry_window, sample_interval=sample_interval,
+        router_seed=router_seed, optimized=optimized)
+
+    jobs = sorted((j.clone_pending() for j in run.jobs),
+                  key=lambda j: j.submit_time)
+    iv = max(rescan_interval, 1e-6)
+    t0 = jobs[0].submit_time if jobs else 0.0
+    t = t0
+    feed = 0
+    windows = 0
+    while True:
+        hi = feed
+        while hi < len(jobs) and jobs[hi].submit_time <= t + iv:
+            hi += 1
+        if hi > feed:
+            fed.submit(jobs[feed:hi])
+            feed = hi
+        if feed >= len(jobs) and (fed.done
+                                  or fed.next_event_time() == math.inf):
+            break
+        nxt = fed.next_event_time()
+        if feed < len(jobs):
+            nxt = min(nxt, jobs[feed].submit_time)
+        if nxt > t + iv:
+            t = t0 + math.floor((nxt - t0) / iv) * iv
+            continue
+        fed.step(t + iv)
+        t += iv
+        windows += 1
+    fed.finalize_telemetry()
+    return FleetStreamResult(result=fed.result(), snapshot=fed.snapshot(),
+                             telemetries=fed.telemetries, windows=windows,
+                             fed=fed)

@@ -6,7 +6,8 @@ from repro.sched.engine import (DEFAULT_QUEUE_WINDOW, EngineHooks,
 from repro.sched.scenarios import (SCENARIOS, Scenario, ScenarioRun,
                                    get_scenario, list_scenarios, register)
 from repro.sched.service import (QuotaPrioritizer, SlaLanePrioritizer,
-                                 StreamResult, run_scenario, run_stream)
+                                 StreamResult, run_scenario, run_stream,
+                                 wrap_tenancy)
 from repro.sched.telemetry import (RollingTelemetry, TelemetrySample,
                                    jain_index)
 
@@ -15,5 +16,6 @@ __all__ = [
     "PolicyPrioritizer", "Prioritizer", "SchedulerEngine", "SCENARIOS",
     "Scenario", "ScenarioRun", "get_scenario", "list_scenarios", "register",
     "QuotaPrioritizer", "SlaLanePrioritizer", "StreamResult", "run_scenario",
-    "run_stream", "RollingTelemetry", "TelemetrySample", "jain_index",
+    "run_stream", "wrap_tenancy", "RollingTelemetry", "TelemetrySample",
+    "jain_index",
 ]

@@ -40,7 +40,9 @@ O(log n) amortized in the pending-queue depth n:
   feasibility are memoized per version, so saturated clusters and repeated
   backfill scans answer repeated placement questions from a dict.
 - ``_earliest_start`` reuses one scratch ``ClusterState`` instead of
-  allocating four numpy arrays per backfill reservation.
+  allocating four numpy arrays per backfill reservation, and walks a
+  **finish-time-ordered index** (sorted ``(finish, job_id)`` pairs kept
+  alongside ``running``) instead of re-sorting the running set per call.
 - ``PolicyPrioritizer`` scores the window with one ``score_batch`` call
   (numpy, bit-identical to the scalar loop) instead of a Python loop.
 
@@ -141,7 +143,16 @@ class EngineHooks:
 
 @dataclasses.dataclass(frozen=True)
 class EngineSnapshot:
-    """O(1) view of engine state for drivers and dashboards."""
+    """O(1) view of engine state for drivers, dashboards, and federation
+    routers.
+
+    All capacity-derived fields count **up nodes only** and are guarded
+    against zero-GPU / empty-cluster division: a cluster whose nodes have
+    all failed reads ``free_gpus == 0`` and finite ``utilization`` /
+    ``fragmentation`` (0.0), never NaN — degenerate fleet members must not
+    poison snapshot-driven routing.  ``free_gpus_by_type`` is the per-SKU
+    free-GPU tally on up nodes (the signal SKU-affinity routing needs).
+    """
 
     now: float
     submitted: int
@@ -155,6 +166,7 @@ class EngineSnapshot:
     milp_calls: int
     backfills: int
     restarts: int
+    free_gpus_by_type: dict = dataclasses.field(default_factory=dict)
 
     @property
     def in_flight(self) -> int:
@@ -212,6 +224,11 @@ class SchedulerEngine:
         self.pending: list[Job] = []
         # job_id -> [job, placement, start, finish, speed]
         self.running: dict[int, list] = {}
+        #: finish-time-ordered index over `running`: sorted (finish, job_id)
+        #: pairs maintained on start/finish/kill/rescale so backfill
+        #: reservations (`_earliest_start`) iterate it directly instead of
+        #: re-sorting the running set per call (optimized mode only)
+        self._finish_index: list[tuple[float, int]] = []
         self.remaining: dict[int, float] = {}
         self.completed: list[Job] = []
         self.gpu_seconds = 0.0
@@ -275,15 +292,17 @@ class SchedulerEngine:
         return self._events[0][0] if self._events else math.inf
 
     def snapshot(self) -> EngineSnapshot:
+        free_up, free_by_type = self.cluster.free_gpu_tallies()
         return EngineSnapshot(
             now=self.now, submitted=self.submitted,
             num_pending=len(self.pending), num_running=len(self.running),
             num_completed=len(self.completed),
-            free_gpus=int(self.cluster.free_gpus.sum()),
-            utilization=self.cluster.utilization(),
-            fragmentation=self.cluster.fragmentation(),
+            free_gpus=free_up,
+            utilization=self.cluster.utilization(up_only=True),
+            fragmentation=self.cluster.fragmentation(up_only=True),
             decisions=self.decisions, milp_calls=self.milp_calls,
             backfills=self.backfills, restarts=self.restarts,
+            free_gpus_by_type=dict(free_by_type),
         )
 
     # ------------------------------------------------------ pending queue ----
@@ -307,6 +326,15 @@ class SchedulerEngine:
             self._pindex.remove(idx)
             return
         self.pending.remove(job)
+
+    # ------------------------------------------------- finish-time index ----
+    def _finish_index_remove(self, finish: float, jid: int) -> None:
+        key = (finish, jid)
+        idx = bisect.bisect_left(self._finish_index, key)
+        if not (idx < len(self._finish_index)
+                and self._finish_index[idx] == key):
+            idx = self._finish_index.index(key)   # defensive: resync
+        del self._finish_index[idx]
 
     # ------------------------------------------------------------ stepping ----
     def step(self, until: float = math.inf, max_events: int | None = None) -> int:
@@ -389,6 +417,8 @@ class SchedulerEngine:
         job.state = JobState.RUNNING
         job.placement = placement
         self.running[job.job_id] = [job, placement, self.now, finish, speed]
+        if self.optimized:
+            bisect.insort(self._finish_index, (finish, job.job_id))
         heapq.heappush(self._events,
                        (finish, next(self._seq), "finish", job.job_id))
         for h in self.hooks:
@@ -426,9 +456,14 @@ class SchedulerEngine:
         sim.load_from(self.cluster)
         if sim.find_placement(job, "pack") is not None:
             return self.now
-        for jid, (rj, pl, st, fin, sp) in sorted(self.running.items(),
-                                                 key=lambda kv: kv[1][3]):
-            sim.release(rj, pl)
+        # the finish-time-ordered index replaces the per-call
+        # sorted(self.running.items()) scan; jobs sharing a finish instant
+        # release in job_id order instead of dict-insertion order, which
+        # cannot change the returned bound (every member of a tie group
+        # yields the same `fin`)
+        for fin, jid in self._finish_index:
+            rec = self.running[jid]
+            sim.release(rec[0], rec[1])
             if sim.find_placement(job, "pack") is not None:
                 return fin
         return float("inf")
@@ -453,6 +488,8 @@ class SchedulerEngine:
 
     def _kill_job(self, jid: int, preserve_ckpt: bool) -> None:
         job, placement, st, fin, speed = self.running.pop(jid)
+        if self.optimized:
+            self._finish_index_remove(fin, jid)
         self.cluster.release(job, placement)
         elapsed = max(0.0, self.now - st)
         work_done = elapsed * speed
@@ -476,6 +513,8 @@ class SchedulerEngine:
         if rec is None:
             return
         job, placement, st, fin, speed = rec
+        if self.optimized:
+            self._finish_index_remove(fin, jid)
         self.cluster.release(job, placement)
         job.finish_time = self.now
         job.state = JobState.COMPLETED
@@ -516,6 +555,9 @@ class SchedulerEngine:
             left = max(fin - self.now, 0.0) * speed / new_speed
             rec[3] = self.now + left
             rec[4] = new_speed
+            if self.optimized:
+                self._finish_index_remove(fin, jid)
+                bisect.insort(self._finish_index, (rec[3], jid))
             heapq.heappush(self._events,
                            (rec[3], next(self._seq), "finish", jid))
 

@@ -59,18 +59,53 @@ class SlaLanePrioritizer:
         self.base.observe_finish(job)
 
 
-class QuotaPrioritizer:
+class QuotaPrioritizer(EngineHooks):
     """Multi-tenant VC quotas over any base prioritizer: jobs belonging to a
     VC whose running GPU share already exceeds its quota are demoted behind
-    all under-quota jobs (weighted-fair-share gate, not preemption)."""
+    all under-quota jobs (weighted-fair-share gate, not preemption).
 
-    def __init__(self, base: Prioritizer, quotas: dict[int, float]):
+    Per-VC running GPU usage is maintained **incrementally**: the driver
+    attaches the prioritizer as an engine hook, so every job start / finish /
+    fault-requeue transition updates one dict entry (O(1)) instead of the
+    former O(running) recompute on every ``rank`` call.
+    ``incremental=False`` retains that recompute (reading
+    ``self.engine.running``) as the differential reference path — both must
+    gate identically."""
+
+    def __init__(self, base: Prioritizer, quotas: dict[int, float],
+                 incremental: bool = True):
         self.base = base
         self.quotas = quotas
         self.use_estimates = base.use_estimates
+        self.incremental = incremental
         self.engine: SchedulerEngine | None = None   # attached by the driver
+        self._usage: dict[int, int] = {}   # vc -> running GPUs (hook-fed)
+
+    # -- EngineHooks: usage tracks exactly the engine's running set ----------
+    def on_start(self, job, now):
+        self._usage[job.vc] = self._usage.get(job.vc, 0) + job.num_gpus
+
+    def on_finish(self, job, now):
+        self._drop(job)
+
+    def on_requeue(self, job, now):
+        self._drop(job)
+
+    def _drop(self, job):
+        left = self._usage.get(job.vc, 0) - job.num_gpus
+        if left > 0:
+            self._usage[job.vc] = left
+        else:
+            self._usage.pop(job.vc, None)
+
+    def reset_usage(self) -> None:
+        """Clear hook-fed usage (drivers call this before attaching to a
+        fresh, idle engine so a reused prioritizer can't carry stale state)."""
+        self._usage.clear()
 
     def _vc_usage(self) -> dict[int, int]:
+        if self.incremental:
+            return self._usage
         used: dict[int, int] = {}
         if self.engine is not None:
             for job, *_ in self.engine.running.values():
@@ -89,6 +124,19 @@ class QuotaPrioritizer:
 
     def observe_finish(self, job):
         self.base.observe_finish(job)
+
+
+def wrap_tenancy(pri: Prioritizer, sla_users: frozenset[int] = frozenset(),
+                 vc_quotas: dict[int, float] | None = None,
+                 enforce_quotas: bool = True) -> Prioritizer:
+    """Wrap a base prioritizer with the SLA bypass lane and/or VC-quota gate
+    a workload's tenant metadata calls for (shared by ``run_scenario`` and
+    the federation layer so both wire tenancy identically)."""
+    if sla_users:
+        pri = SlaLanePrioritizer(pri, sla_users)
+    if vc_quotas and enforce_quotas:
+        pri = QuotaPrioritizer(pri, vc_quotas)
+    return pri
 
 
 # ----------------------------------------------------------------- drivers ----
@@ -118,6 +166,10 @@ def run_stream(
     only take effect at their event instant).
     """
     all_hooks = tuple(hooks) + ((telemetry,) if telemetry is not None else ())
+    if isinstance(prioritizer, QuotaPrioritizer) and prioritizer.incremental:
+        # hook-fed per-VC usage: the engine starts idle, so start from zero
+        prioritizer.reset_usage()
+        all_hooks += (prioritizer,)
     engine = SchedulerEngine(
         spec, prioritizer, allocator=allocator, backfill=backfill,
         lookahead_k=lookahead_k, fault_model=fault_model,
@@ -186,10 +238,8 @@ def run_scenario(
     run = scenario.build(num_jobs, seed) if isinstance(scenario, Scenario) \
         else scenario
     pri = prioritizer or PolicyPrioritizer(make_policy("fcfs"))
-    if run.sla_users:
-        pri = SlaLanePrioritizer(pri, run.sla_users)
-    if run.vc_quotas and enforce_quotas:
-        pri = QuotaPrioritizer(pri, run.vc_quotas)
+    pri = wrap_tenancy(pri, run.sla_users, run.vc_quotas,
+                       enforce_quotas=enforce_quotas)
     telemetry = RollingTelemetry(window=telemetry_window,
                                  sample_interval=sample_interval)
     return run_stream(

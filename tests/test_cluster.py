@@ -86,3 +86,26 @@ def test_num_ways():
     big = mk_job(1, 10_000)
     assert c.num_ways_to_schedule(big) == 0
     assert not c.can_schedule_now(big)
+
+
+def test_ratios_finite_on_degenerate_clusters():
+    """Bugfix pin: utilization/fragmentation never divide by vanished
+    capacity — all-nodes-failed and empty clusters read finite ratios."""
+    import math
+
+    from repro.core.types import ClusterSpec
+
+    c = ClusterState(make_cluster("helios"))
+    for node in range(len(c.spec.nodes)):
+        c.fail_node(node)
+    for up_only in (False, True):
+        assert math.isfinite(c.utilization(up_only=up_only))
+        assert math.isfinite(c.fragmentation(up_only=up_only))
+    # up-only views ignore free GPUs stranded on down nodes entirely
+    assert c.utilization(up_only=True) == 0.0
+    assert c.fragmentation(up_only=True) == 0.0
+    assert c.free_gpu_tallies()[0] == 0
+
+    empty = ClusterState(ClusterSpec(nodes=[], name="empty"))
+    assert empty.utilization() == 0.0 == empty.utilization(up_only=True)
+    assert empty.fragmentation() == 0.0 == empty.fragmentation(up_only=True)

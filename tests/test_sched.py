@@ -280,6 +280,24 @@ def test_pending_queue_stays_sorted():
     assert checked > 0 and e.done
 
 
+def test_finish_index_mirrors_running_set():
+    """Finish-time-index invariant: after every step — through starts,
+    finishes, fault kills, and straggler rescales — `_finish_index` holds
+    exactly the running set's (finish_time, job_id) pairs, sorted."""
+    jobs = generate_trace("philly", 64, seed=3)
+    fm = FaultModel(mtbf_per_node=3 * 3600.0, repair_time=600.0,
+                    straggler_prob=0.3, straggler_slowdown=0.4, seed=1)
+    e = _make_engine(make_cluster("philly"), allocator="pack", fault_model=fm)
+    e.submit([j.clone_pending() for j in jobs])
+    checked = 0
+    while e._events:
+        e.step(e.next_event_time())
+        expect = sorted((rec[3], jid) for jid, rec in e.running.items())
+        assert e._finish_index == expect
+        checked += 1
+    assert checked > 0 and e.done
+
+
 def test_guard_raises_runtime_error(helios_cluster):
     """The runaway guard must be a RuntimeError (asserts vanish under
     `python -O`)."""

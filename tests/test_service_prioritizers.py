@@ -1,0 +1,172 @@
+"""Coverage for the tenancy prioritizer wrappers in repro.sched.service:
+the SLA bypass lane (previously untested) and the incremental VC-quota gate
+(differential-pinned against its O(running) recompute reference)."""
+import pytest
+
+from repro.core import PolicyPrioritizer, make_cluster, make_policy
+from repro.core.types import Job
+from repro.sched import (EngineHooks, QuotaPrioritizer, SlaLanePrioritizer,
+                         get_scenario, run_stream, wrap_tenancy)
+
+
+def _job(jid, *, user=0, vc=0, submit=0.0, runtime=100.0, gpus=1):
+    return Job(job_id=jid, user=user, submit_time=submit, runtime=runtime,
+               est_runtime=runtime, num_gpus=gpus, vc=vc)
+
+
+@pytest.fixture()
+def cluster_state():
+    from repro.core.cluster import ClusterState
+    return ClusterState(make_cluster("helios"))
+
+
+# ---------------------------------------------------------------- SLA lane ----
+
+
+def test_sla_jobs_bypass_to_front(cluster_state):
+    """SLA-bound users' jobs rank before every best-effort job, regardless
+    of what the base policy would prefer."""
+    jobs = [
+        _job(0, user=1, submit=0.0, runtime=10.0),     # best-effort, tiny
+        _job(1, user=9, submit=50.0, runtime=9000.0),  # SLA, huge
+        _job(2, user=2, submit=10.0, runtime=20.0),    # best-effort
+        _job(3, user=9, submit=5.0, runtime=8000.0),   # SLA
+    ]
+    pri = SlaLanePrioritizer(PolicyPrioritizer(make_policy("sjf")),
+                             frozenset({9}))
+    order = pri.rank(jobs, cluster_state, now=100.0)
+    assert order[:2] == [3, 1]          # SLA first...
+    assert set(order[2:]) == {0, 2}     # ...then everyone else
+
+
+def test_sla_jobs_fcfs_among_themselves(cluster_state):
+    """Inside the SLA lane, ordering is FCFS by (submit_time, job_id) even
+    when the base policy (SJF) would invert it."""
+    jobs = [
+        _job(0, user=5, submit=30.0, runtime=1.0),    # SLA, latest, shortest
+        _job(1, user=5, submit=10.0, runtime=500.0),  # SLA, earliest, longest
+        _job(2, user=5, submit=20.0, runtime=50.0),   # SLA, middle
+    ]
+    pri = SlaLanePrioritizer(PolicyPrioritizer(make_policy("sjf")),
+                             frozenset({5}))
+    assert pri.rank(jobs, cluster_state, now=40.0) == [1, 2, 0]
+
+
+def test_sla_lane_preserves_base_order_for_best_effort(cluster_state):
+    """Best-effort jobs keep exactly the base prioritizer's relative order
+    behind the SLA lane."""
+    jobs = [
+        _job(0, user=1, runtime=300.0),
+        _job(1, user=7, runtime=5.0),      # SLA
+        _job(2, user=2, runtime=10.0),
+        _job(3, user=3, runtime=100.0),
+    ]
+    base = PolicyPrioritizer(make_policy("sjf"))
+    pri = SlaLanePrioritizer(base, frozenset({7}))
+    order = pri.rank(jobs, cluster_state, now=0.0)
+    rest = [jobs[i] for i in order if jobs[i].user != 7]
+    base_rest = [j for j in jobs if j.user != 7]
+    base_order = base.rank(base_rest, cluster_state, now=0.0)
+    assert rest == [base_rest[i] for i in base_order]   # SJF: 2, 3, 0
+    assert [j.job_id for j in rest] == [2, 3, 0]
+
+
+def test_sla_lane_no_sla_users_is_transparent(cluster_state):
+    jobs = [_job(0, runtime=300.0), _job(1, runtime=5.0)]
+    base = PolicyPrioritizer(make_policy("sjf"))
+    pri = SlaLanePrioritizer(base, frozenset())
+    assert pri.rank(jobs, cluster_state, 0.0) == \
+        base.rank(jobs, cluster_state, 0.0)
+    assert pri.use_estimates == base.use_estimates
+
+
+# -------------------------------------------------------------- quota gate ----
+
+
+def test_quota_demotes_over_quota_vcs(cluster_state):
+    """Jobs from a VC whose hook-fed usage exceeds its quota are demoted
+    behind every under-quota job."""
+    pri = QuotaPrioritizer(PolicyPrioritizer(make_policy("fcfs")),
+                           {0: 0.10, 1: 0.90})
+    # simulate engine hooks: VC 0 holds 200 of 400 GPUs (over a 10% quota)
+    pri.on_start(_job(90, vc=0, gpus=200), now=0.0)
+    jobs = [_job(0, vc=0, submit=0.0), _job(1, vc=1, submit=1.0),
+            _job(2, vc=0, submit=2.0), _job(3, vc=1, submit=3.0)]
+    assert pri.rank(jobs, cluster_state, 10.0) == [1, 3, 0, 2]
+    # once the hog finishes, FCFS order is restored
+    pri.on_finish(_job(90, vc=0, gpus=200), now=5.0)
+    assert pri.rank(jobs, cluster_state, 10.0) == [0, 1, 2, 3]
+
+
+def test_quota_usage_tracks_start_finish_requeue():
+    pri = QuotaPrioritizer(PolicyPrioritizer(make_policy("fcfs")), {0: 0.5})
+    a, b = _job(0, vc=2, gpus=8), _job(1, vc=2, gpus=4)
+    pri.on_start(a, 0.0)
+    pri.on_start(b, 0.0)
+    assert pri._usage == {2: 12}
+    pri.on_requeue(a, 1.0)      # fault kill re-queues: usage drops
+    assert pri._usage == {2: 4}
+    pri.on_finish(b, 2.0)
+    assert pri._usage == {}     # empty VCs are dropped, not left at 0
+    pri.reset_usage()
+    assert pri._usage == {}
+
+
+class _UsageAuditor(EngineHooks):
+    """Asserts, at every engine tick, that the hook-fed incremental usage
+    equals a fresh O(running) recompute from the engine's running set."""
+
+    def __init__(self, pri):
+        self.pri = pri
+        self.checked = 0
+
+    def on_tick(self, now, engine):
+        expect = {}
+        for job, *_ in engine.running.values():
+            expect[job.vc] = expect.get(job.vc, 0) + job.num_gpus
+        assert self.pri._usage == expect
+        self.checked += 1
+
+
+def test_quota_incremental_matches_recompute_every_tick():
+    """The incremental usage dict equals the O(running) recompute after
+    every processed event batch, including fault-driven requeues."""
+    run = get_scenario("fault-storm").build(64, seed=2)
+    pri = QuotaPrioritizer(PolicyPrioritizer(make_policy("fcfs")),
+                           {0: 0.25, 1: 0.25, 2: 0.25, 3: 0.25})
+    auditor = _UsageAuditor(pri)
+    run_stream(run.spec, [j.clone_pending() for j in run.jobs], pri,
+               allocator="pack", fault_model=run.fault_model,
+               hooks=(auditor,))
+    assert auditor.checked > 0
+
+
+@pytest.mark.parametrize("scenario", ["multi-tenant", "fault-storm"])
+def test_quota_incremental_differential(scenario):
+    """Equivalence pin (ROADMAP perf round-2 item c): the incremental gate
+    schedules bit-identically to the O(running)-per-rank recompute path."""
+    run = get_scenario(scenario).build(120, seed=9)
+    quotas = run.vc_quotas or {0: 0.25, 1: 0.25, 2: 0.25, 3: 0.25}
+    outs = []
+    for incremental in (True, False):
+        pri = QuotaPrioritizer(PolicyPrioritizer(make_policy("fcfs")),
+                               quotas, incremental=incremental)
+        sr = run_stream(run.spec, [j.clone_pending() for j in run.jobs],
+                        pri, allocator="pack", fault_model=run.fault_model,
+                        chunked_submit=True)
+        outs.append({j.job_id: (j.start_time, j.finish_time, j.restarts)
+                     for j in sr.batch.jobs})
+    assert outs[0] == outs[1]
+
+
+def test_wrap_tenancy_composition():
+    base = PolicyPrioritizer(make_policy("fcfs"))
+    assert wrap_tenancy(base) is base
+    sla = wrap_tenancy(base, frozenset({1}))
+    assert isinstance(sla, SlaLanePrioritizer)
+    both = wrap_tenancy(base, frozenset({1}), {0: 0.5})
+    assert isinstance(both, QuotaPrioritizer)
+    assert isinstance(both.base, SlaLanePrioritizer)
+    assert isinstance(wrap_tenancy(base, vc_quotas={0: 0.5},
+                                   enforce_quotas=False),
+                      PolicyPrioritizer)

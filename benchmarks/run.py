@@ -6,21 +6,27 @@ artifact (e.g. ``BENCH_streaming.json``) that is listed in the run summary
 so cross-PR perf tracking knows where to look.  Module selection:
 ``python -m benchmarks.run [module ...]`` with modules in {latency, kernels,
 roofline, variability, naive, qssf, util, transfer, policies, streaming,
-federation}.
+federation, rl_streaming}.
+``--smoke`` runs every selected module that supports it in its fast CI mode
+(modules whose ``run`` accepts a ``smoke`` kwarg; others run normally).
 REPRO_BENCH_SCALE=full for paper-scale runs.
 """
 from __future__ import annotations
 
+import inspect
 import os
 import sys
 import time
 
 MODULES = ("latency", "kernels", "roofline", "variability", "naive", "qssf",
-           "util", "transfer", "policies", "streaming", "federation")
+           "util", "transfer", "policies", "streaming", "federation",
+           "rl_streaming")
 
 
 def main() -> None:
-    want = sys.argv[1:] or list(MODULES)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    want = [a for a in args if a != "--smoke"] or list(MODULES)
     rows: list[str] = []
     artifacts: list[str] = []
     t0 = time.time()
@@ -33,7 +39,10 @@ def main() -> None:
         t1 = time.time()
         ok = True
         try:
-            mod.run(rows)
+            if smoke and "smoke" in inspect.signature(mod.run).parameters:
+                mod.run(rows, smoke=True)
+            else:
+                mod.run(rows)
         except Exception as e:  # noqa: BLE001
             import traceback
             traceback.print_exc()

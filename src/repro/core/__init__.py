@@ -10,8 +10,20 @@ from repro.core.simulator import PolicyPrioritizer, Simulator
 from repro.core.trace import (ALIBABA, HELIOS, PHILLY, PROFILES, batch_iter,
                               generate_trace, load_trace_csv, make_cluster,
                               train_eval_split)
-from repro.core.trainer import RLTuneTrainer, TrainerConfig, improvement
 from repro.core.types import ClusterSpec, Job, JobState, NodeSpec
+
+#: trainer names are re-exported lazily (PEP 562): the batch trainer now
+#: lives in repro.rl.batch, which imports repro.core submodules — an eager
+#: import here would be circular whichever package loads first.
+_LAZY_TRAINER = ("RLTuneTrainer", "TrainerConfig", "EpochStats",
+                 "improvement")
+
+
+def __getattr__(name: str):
+    if name in _LAZY_TRAINER:
+        from repro.core import trainer
+        return getattr(trainer, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
 
 __all__ = [
     "PPOAgent", "PPOConfig", "ClusterState", "InspectorPrioritizer",

@@ -5,8 +5,14 @@ The actor is a 3-layer MLP applied per-job with shared weights (the paper's
 over the queue yields normalized priorities.  The critic is a 3-layer MLP over
 the flattened 5-feature Critic Vector (all jobs at once) estimating the batch
 return.  MAX_QUEUE_SIZE = 256 with zero-padding keeps state/action spaces
-fixed.  Training uses PPO-clip; the (sparse, terminal) batch reward is the
-normalized base-vs-RL performance gap.
+fixed.  Training uses PPO-clip over one of two reward pathways:
+
+- **terminal** (paper-faithful, ``finish_episode``): the sparse batch reward
+  is the normalized base-vs-RL performance gap, assigned to every step
+  (gamma = 1); pinned bit-identical for the legacy batch trainer.
+- **dense** (``finish_episode_dense``, used by ``repro.rl``): per-step shaped
+  rewards from rolling-telemetry deltas with GAE(gamma, lambda) advantages —
+  the streaming-episode pathway.
 """
 from __future__ import annotations
 
@@ -36,6 +42,8 @@ class PPOConfig:
     max_steps: int = 512          # trajectory padding length
     episodes_per_update: int = 1  # >1: batch episodes before PPO (beyond-paper
     #                               variance reduction; 1 = paper-faithful)
+    gamma: float = 0.99           # dense-reward discount (GAE pathway only;
+    gae_lambda: float = 0.95      #  the terminal pathway stays gamma = 1)
     seed: int = 0
 
 
@@ -160,6 +168,30 @@ def ppo_update_step(params: Params, opt_state: dict, batch: dict, *,
     return params, opt_state, loss
 
 
+def gae_advantages(rewards: np.ndarray, values: np.ndarray,
+                   bootstrap_value: float, gamma: float,
+                   lam: float) -> np.ndarray:
+    """Generalized Advantage Estimation over one episode.
+
+    ``bootstrap_value`` is V(s_{T+1}) for truncated episodes (0.0 for
+    terminal ones): adv_t = sum_l (gamma*lam)^l * delta_{t+l} with
+    delta_t = r_t + gamma * V_{t+1} - V_t.
+    """
+    T = len(rewards)
+    adv = np.zeros(T, dtype=np.float32)
+    last = 0.0
+    nxt = float(bootstrap_value)
+    for t in range(T - 1, -1, -1):
+        delta = float(rewards[t]) + gamma * nxt - float(values[t])
+        last = delta + gamma * lam * last
+        adv[t] = last
+        nxt = float(values[t])
+    return adv
+
+
+_TRAJ_KEYS = ("ov", "cv", "mask", "action", "logp", "value")
+
+
 class PPOAgent:
     """Stateful wrapper: rollout recording + PPO updates."""
 
@@ -172,10 +204,22 @@ class PPOAgent:
 
     # ------------------------------------------------------------- rollout ----
     def reset_buffer(self) -> None:
-        self._traj: dict[str, list] = {k: [] for k in
-                                       ("ov", "cv", "mask", "action", "logp", "value")}
+        self._traj: dict[str, list] = {k: [] for k in _TRAJ_KEYS}
         if not hasattr(self, "_episodes"):
             self._episodes: list[tuple[dict, float]] = []
+        if not hasattr(self, "_dense"):
+            # (traj, per-step rewards, bootstrap value) per dense episode
+            self._dense: list[tuple[dict, np.ndarray, float]] = []
+
+    @property
+    def rollout_len(self) -> int:
+        """Steps recorded in the open (unfinished) episode."""
+        return len(self._traj["action"])
+
+    @property
+    def rollout_values(self) -> list[float]:
+        """Critic value estimates of the open episode's recorded steps."""
+        return list(self._traj["value"])
 
     def act(self, ov: np.ndarray, cv: np.ndarray, mask: np.ndarray,
             explore: bool = True, record: bool = True) -> tuple[int, np.ndarray]:
@@ -199,44 +243,19 @@ class PPOAgent:
         return int(order[0]), logits
 
     # -------------------------------------------------------------- update ----
-    def finish_episode(self, reward: float) -> dict[str, float]:
-        """Assign the terminal batch reward to every step (gamma = 1, sparse
-        terminal reward => return_t = R).  With episodes_per_update > 1,
-        episodes are pooled before the PPO update (variance reduction)."""
-        T = len(self._traj["action"])
-        steps = T
-        if T:
-            self._episodes.append((self._traj, reward))
-        self._traj = {k: [] for k in
-                      ("ov", "cv", "mask", "action", "logp", "value")}
-        if not self._episodes or \
-                len(self._episodes) < self.cfg.episodes_per_update:
-            return {"loss": 0.0, "steps": steps, "updated": 0.0}
+    def _run_update(self, cat: dict[str, list], rets: np.ndarray,
+                    adv: np.ndarray, Tc: int) -> float:
+        """Pad the concatenated rollout to ``max_steps`` and run the PPO-clip
+        epochs.  Shared by the terminal and dense reward pathways; the ops
+        are exactly the pre-refactor ``finish_episode`` tail, so the terminal
+        path remains bit-identical on fixed seeds."""
         cfg = self.cfg
         P = cfg.max_steps
-
-        # concatenate pooled episodes (truncate to the padding budget)
-        cat: dict[str, list] = {k: [] for k in
-                                ("ov", "cv", "mask", "action", "logp", "value")}
-        rets_l: list[float] = []
-        for traj, rew in self._episodes:
-            n = len(traj["action"])
-            for k in cat:
-                cat[k].extend(traj[k])
-            rets_l.extend([rew] * n)
-        Tc = min(len(cat["action"]), P)
 
         def padded(arr, shape, dtype=np.float32):
             out = np.zeros((P,) + shape, dtype=dtype)
             out[:Tc] = np.asarray(arr[:Tc], dtype=dtype)
             return out
-
-        values = np.asarray(cat["value"][:Tc], dtype=np.float32)
-        rets = np.asarray(rets_l[:Tc], dtype=np.float32)
-        # NOTE: no per-episode advantage normalization — with a constant
-        # terminal reward it would divide by the (tiny) std of the value
-        # net's noise and blow up the gradient.  The critic is the baseline.
-        adv = np.clip(rets - values, -5.0, 5.0)
 
         batch = {
             "ov": padded(cat["ov"], (MAX_QUEUE_SIZE, OV_SIZE)),
@@ -256,8 +275,95 @@ class PPOAgent:
                 clip_eps=cfg.clip_eps, value_coef=cfg.value_coef,
                 entropy_coef=cfg.entropy_coef, lr=cfg.lr,
                 max_norm=cfg.max_grad_norm)
+        return float(loss)
+
+    def finish_episode(self, reward: float) -> dict[str, float]:
+        """Assign the terminal batch reward to every step (gamma = 1, sparse
+        terminal reward => return_t = R).  With episodes_per_update > 1,
+        episodes are pooled before the PPO update (variance reduction)."""
+        T = len(self._traj["action"])
+        steps = T
+        if T:
+            self._episodes.append((self._traj, reward))
+        self._traj = {k: [] for k in _TRAJ_KEYS}
+        if not self._episodes or \
+                len(self._episodes) < self.cfg.episodes_per_update:
+            return {"loss": 0.0, "steps": steps, "updated": 0.0}
+        cfg = self.cfg
+        P = cfg.max_steps
+
+        # concatenate pooled episodes (truncate to the padding budget)
+        cat: dict[str, list] = {k: [] for k in _TRAJ_KEYS}
+        rets_l: list[float] = []
+        for traj, rew in self._episodes:
+            n = len(traj["action"])
+            for k in cat:
+                cat[k].extend(traj[k])
+            rets_l.extend([rew] * n)
+        Tc = min(len(cat["action"]), P)
+
+        values = np.asarray(cat["value"][:Tc], dtype=np.float32)
+        rets = np.asarray(rets_l[:Tc], dtype=np.float32)
+        # NOTE: no per-episode advantage normalization — with a constant
+        # terminal reward it would divide by the (tiny) std of the value
+        # net's noise and blow up the gradient.  The critic is the baseline.
+        adv = np.clip(rets - values, -5.0, 5.0)
+
+        loss = self._run_update(cat, rets, adv, Tc)
         self._episodes = []
-        return {"loss": float(loss), "steps": steps, "updated": 1.0}
+        return {"loss": loss, "steps": steps, "updated": 1.0}
+
+    def finish_episode_dense(self, rewards, *,
+                             bootstrap_value: float = 0.0) -> dict[str, float]:
+        """Close the open episode with **per-step dense rewards** and run a
+        GAE(gamma, lambda) PPO update (the streaming pathway, ``repro.rl``).
+
+        ``rewards`` must have one entry per recorded step;
+        ``bootstrap_value`` is V(s_{T+1}) for truncated (non-terminal)
+        episodes.  Advantages are normalized per update — safe here because
+        shaped rewards vary step to step (contrast the terminal pathway's
+        constant-reward note) — then clipped like the terminal path.
+        Respects ``episodes_per_update`` pooling.
+        """
+        T = len(self._traj["action"])
+        rewards = np.asarray(rewards, dtype=np.float32)
+        if rewards.shape != (T,):
+            raise ValueError(f"got {rewards.shape[0] if rewards.ndim else 0} "
+                             f"rewards for {T} recorded steps")
+        steps = T
+        if T:
+            self._dense.append((self._traj, rewards, float(bootstrap_value)))
+        self._traj = {k: [] for k in _TRAJ_KEYS}
+        if not self._dense or len(self._dense) < self.cfg.episodes_per_update:
+            return {"loss": 0.0, "steps": steps, "updated": 0.0,
+                    "mean_reward": float(rewards.mean()) if T else 0.0}
+        cfg = self.cfg
+
+        cat: dict[str, list] = {k: [] for k in _TRAJ_KEYS}
+        rets_l: list[np.ndarray] = []
+        advs_l: list[np.ndarray] = []
+        rews_l: list[np.ndarray] = []
+        for traj, rews, boot in self._dense:
+            vals = np.asarray(traj["value"], dtype=np.float32)
+            adv = gae_advantages(rews, vals, boot, cfg.gamma, cfg.gae_lambda)
+            rets_l.append(adv + vals)
+            advs_l.append(adv)
+            rews_l.append(rews)
+            for k in cat:
+                cat[k].extend(traj[k])
+        Tc = min(len(cat["action"]), cfg.max_steps)
+        rets = np.concatenate(rets_l)[:Tc].astype(np.float32)
+        adv = np.concatenate(advs_l)[:Tc].astype(np.float32)
+        std = float(adv.std())
+        if std > 1e-6:
+            adv = (adv - float(adv.mean())) / (std + 1e-8)
+        adv = np.clip(adv, -5.0, 5.0)
+
+        loss = self._run_update(cat, rets, adv, Tc)
+        mean_r = float(np.concatenate(rews_l).mean())
+        self._dense = []
+        return {"loss": loss, "steps": steps, "updated": 1.0,
+                "mean_reward": mean_r}
 
     # ------------------------------------------------------------- persist ----
     def state_dict(self) -> dict:

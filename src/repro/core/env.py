@@ -10,8 +10,18 @@ an RL gate decides execute-vs-skip for the head job.
 
 NaiveRLPrioritizer (raw features, no sampling) + allocator="pack" reproduces
 both naive-RLTune (Fig. 10) and the RLScheduler mechanism adapted to GPUs.
+
+Streaming observe path (``streaming=True``): the prioritizer maintains
+rolling EWMA statistics of the finished-job stream (``StreamStats``) fed by
+the engine's ``observe_finish`` callback, and exposes ``record`` — a toggle
+the episode cutter (``repro.rl``) flips to warm a congested cluster under
+the current policy without recording warm-up decisions into the PPO buffer.
+Defaults (``streaming=False, record=True``) keep the legacy batch pipeline
+bit-identical on fixed seeds.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -22,22 +32,51 @@ from repro.core.policies import Policy
 from repro.core.types import Job
 
 
+@dataclasses.dataclass
+class StreamStats:
+    """Rolling EWMA view of the finished-job stream (streaming observe
+    path).  The first finish seeds the averages; afterwards each finish
+    moves them by ``alpha``."""
+
+    alpha: float = 0.05
+    finished: int = 0
+    ewma_wait: float = 0.0
+    ewma_jct: float = 0.0
+
+    def update(self, job: Job) -> None:
+        self.finished += 1
+        a = 1.0 if self.finished == 1 else self.alpha
+        self.ewma_wait += a * (job.wait_time - self.ewma_wait)
+        self.ewma_jct += a * (job.jct - self.ewma_jct)
+
+
 class RLPrioritizer:
     """The RLTune prioritizer (pro- or naive- variant)."""
 
     def __init__(self, agent: PPOAgent, *, explore: bool = True,
-                 use_estimates: bool = False, raw_features: bool = False):
+                 use_estimates: bool = False, raw_features: bool = False,
+                 streaming: bool = False):
         self.agent = agent
         self.explore = explore
         self.use_estimates = use_estimates
         self.raw_features = raw_features
+        self.record = True
+        self.stream_stats = StreamStats() if streaming else None
+
+    def set_mode(self, *, explore: bool | None = None,
+                 record: bool | None = None) -> None:
+        """Flip exploration/recording mid-stream (warm-up, greedy eval)."""
+        if explore is not None:
+            self.explore = explore
+        if record is not None:
+            self.record = record
 
     def rank(self, jobs: list[Job], cluster: ClusterState, now: float) -> list[int]:
         ov, cv, mask = build_state(jobs, cluster, now,
                                    use_estimates=self.use_estimates,
                                    raw=self.raw_features)
         action, logits = self.agent.act(ov, cv, mask, explore=self.explore,
-                                        record=self.explore)
+                                        record=self.explore and self.record)
         n = min(len(jobs), MAX_QUEUE_SIZE)
         order = list(np.argsort(-logits[:n], kind="stable"))
         if action < n:
@@ -48,7 +87,8 @@ class RLPrioritizer:
         return order
 
     def observe_finish(self, job: Job) -> None:
-        pass
+        if self.stream_stats is not None:
+            self.stream_stats.update(job)
 
 
 class InspectorPrioritizer:

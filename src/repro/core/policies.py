@@ -246,15 +246,20 @@ class SlurmMultifactor:
             else _farr(jobs, _GET_SUBMIT)
         age = np.minimum(np.maximum(0.0, now - st) / (7 * 86400.0), 1.0)
         total = sum(self._usage.values()) + 1e-9
-        fs_by_user = {u: self._fairshare(u, total)
-                      for u in {j.user for j in jobs}}
-        fairshare = np.fromiter((fs_by_user[j.user] for j in jobs),
+        # float user keys (engine field arrays) hash/compare equal to the
+        # scalar path's int keys, so usage lookups and the per-user memo
+        # stay collision-free and bit-identical
+        users = fields.user.tolist() if fields is not None \
+            else [j.user for j in jobs]
+        fs_by_user = {u: self._fairshare(u, total) for u in set(users)}
+        fairshare = np.fromiter(map(fs_by_user.__getitem__, users),
                                 np.float64, count=n)
         hours = _rt_arr(jobs, self.use_estimates, fields) / 3600.0
         l1p = np.fromiter(map(_LOG1P.__getitem__, hours.tolist()),
                           np.float64, count=n)
         jobsize = 1.0 / (1.0 + l1p)
-        partition = 1.0 - _farr(jobs, _GET_VC) / 10.0
+        vc = fields.vc if fields is not None else _farr(jobs, _GET_VC)
+        partition = 1.0 - vc / 10.0
         qos = 1.0
         w = self.weights
         pri = (w["age"] * age + w["fairshare"] * fairshare
@@ -293,10 +298,19 @@ class QSSF:
     def score_batch(self, jobs: list[Job], now: float,
                     fields=None) -> np.ndarray:
         means = {u: sum(h) / len(h) for u, h in self._hist.items() if h}
-        pred = np.fromiter(
-            (means[j.user] if j.user in means else _rt(j, self.use_estimates)
-             for j in jobs),
-            np.float64, count=len(jobs))
+        if fields is not None:
+            # float user keys hash equal to the history's int keys; the
+            # cold-start fallback is _rt_arr's elementwise max (== _rt)
+            cold = _rt_arr(jobs, self.use_estimates, fields).tolist()
+            pred = np.fromiter(
+                (means[u] if u in means else c
+                 for u, c in zip(fields.user.tolist(), cold)),
+                np.float64, count=len(jobs))
+        else:
+            pred = np.fromiter(
+                (means[j.user] if j.user in means
+                 else _rt(j, self.use_estimates) for j in jobs),
+                np.float64, count=len(jobs))
         g = fields.num_gpus if fields is not None else _farr(jobs, _GET_GPUS)
         return pred * g
 

@@ -18,17 +18,24 @@ class WindowFields:
     The streaming engine maintains these arrays incrementally alongside its
     indexed pending queue and passes O(1) views per decision, so batch
     scoring never re-gathers Python attributes.  Arrays are read-only by
-    convention; ``num_gpus`` is float64 (exact for any realistic GPU count).
+    convention; integer-valued fields (``num_gpus``, ``user``, ``vc``) are
+    stored as float64 — exact for any realistic value (< 2**53), and float
+    keys hash/compare equal to the original ints so dict-based policy state
+    (fair-share usage, runtime history) stays collision-free.
     """
 
-    __slots__ = ("submit_time", "runtime", "est_runtime", "num_gpus")
+    __slots__ = ("submit_time", "runtime", "est_runtime", "num_gpus",
+                 "user", "vc")
 
     def __init__(self, submit_time: np.ndarray, runtime: np.ndarray,
-                 est_runtime: np.ndarray, num_gpus: np.ndarray):
+                 est_runtime: np.ndarray, num_gpus: np.ndarray,
+                 user: np.ndarray, vc: np.ndarray):
         self.submit_time = submit_time
         self.runtime = runtime
         self.est_runtime = est_runtime
         self.num_gpus = num_gpus
+        self.user = user
+        self.vc = vc
 
     @classmethod
     def from_jobs(cls, jobs: list[Job]) -> "WindowFields":
@@ -37,7 +44,17 @@ class WindowFields:
             np.array([j.runtime for j in jobs], dtype=np.float64),
             np.array([j.est_runtime for j in jobs], dtype=np.float64),
             np.array([j.num_gpus for j in jobs], dtype=np.float64),
+            np.array([j.user for j in jobs], dtype=np.float64),
+            np.array([j.vc for j in jobs], dtype=np.float64),
         )
+
+    def take(self, indices: list[int]) -> "WindowFields":
+        """Row-subset copy for wrapper prioritizers that rank a partition
+        of the window (e.g. the non-SLA lane) through their base."""
+        ix = np.asarray(indices, dtype=np.intp)
+        return WindowFields(self.submit_time[ix], self.runtime[ix],
+                            self.est_runtime[ix], self.num_gpus[ix],
+                            self.user[ix], self.vc[ix])
 
 
 class Prioritizer(Protocol):

@@ -1,0 +1,24 @@
+"""repro.rl: the RL training stack, lifted out of ``repro.core.trainer`` /
+``repro.core.env`` and refactored onto the streaming scheduler engine.
+
+- ``repro.rl.episodes`` — ``EpisodeCutter`` slices a running
+  ``SchedulerEngine`` into fixed-horizon PPO episodes with dense shaped
+  rewards from rolling-telemetry deltas.
+- ``repro.rl.trainer`` — ``StreamingTrainer`` samples episodes from the
+  registered scenario distribution and evaluates greedily through
+  ``service.run_stream``.
+- ``repro.rl.batch`` — the legacy batch-pair trainer (``RLTuneTrainer``),
+  the terminal-reward special case; re-exported by ``repro.core.trainer``
+  and pinned bit-identical on fixed seeds.
+"""
+from repro.rl.batch import (EpochStats, RLTuneTrainer, TrainerConfig,
+                            improvement)
+from repro.rl.episodes import (EpisodeCutter, EpisodeStats, RewardWeights,
+                               WindowStats, shaped_reward)
+from repro.rl.trainer import StreamingConfig, StreamingTrainer
+
+__all__ = [
+    "EpochStats", "RLTuneTrainer", "TrainerConfig", "improvement",
+    "EpisodeCutter", "EpisodeStats", "RewardWeights", "WindowStats",
+    "shaped_reward", "StreamingConfig", "StreamingTrainer",
+]

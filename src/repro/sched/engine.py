@@ -84,10 +84,10 @@ class _PendingFieldIndex:
     Inserts/removals memmove the suffix (C-speed, amortized cheap next to
     the O(window) Python work they replace); the ranking window is then a
     free O(1) slice view per field, so batch scoring never re-gathers job
-    attributes.  ``num_gpus`` is stored as float64 — exact for any
-    realistic GPU count (< 2**53)."""
+    attributes.  Integer-valued fields (``num_gpus``, ``user``, ``vc``)
+    are stored as float64 — exact for any realistic value (< 2**53)."""
 
-    __slots__ = ("n", "_cap", "_st", "_rt", "_est", "_gpus")
+    __slots__ = ("n", "_cap", "_st", "_rt", "_est", "_gpus", "_user", "_vc")
 
     def __init__(self, cap: int = 256):
         self.n = 0
@@ -96,9 +96,12 @@ class _PendingFieldIndex:
         self._rt = np.empty(cap, dtype=np.float64)
         self._est = np.empty(cap, dtype=np.float64)
         self._gpus = np.empty(cap, dtype=np.float64)
+        self._user = np.empty(cap, dtype=np.float64)
+        self._vc = np.empty(cap, dtype=np.float64)
 
     def _arrays(self):
-        return (self._st, self._rt, self._est, self._gpus)
+        return (self._st, self._rt, self._est, self._gpus, self._user,
+                self._vc)
 
     def insert(self, idx: int, job: Job) -> None:
         n = self.n
@@ -109,10 +112,11 @@ class _PendingFieldIndex:
                 g = np.empty(self._cap, dtype=np.float64)
                 g[:n] = a[:n]
                 grown.append(g)
-            self._st, self._rt, self._est, self._gpus = grown
+            (self._st, self._rt, self._est, self._gpus, self._user,
+             self._vc) = grown
         for a, v in zip(self._arrays(),
                         (job.submit_time, job.runtime, job.est_runtime,
-                         job.num_gpus)):
+                         job.num_gpus, job.user, job.vc)):
             a[idx + 1:n + 1] = a[idx:n]
             a[idx] = v
         self.n = n + 1
@@ -126,7 +130,7 @@ class _PendingFieldIndex:
     def window(self, w: int) -> WindowFields:
         w = min(w, self.n)
         return WindowFields(self._st[:w], self._rt[:w], self._est[:w],
-                            self._gpus[:w])
+                            self._gpus[:w], self._user[:w], self._vc[:w])
 
 
 class EngineHooks:
@@ -139,6 +143,15 @@ class EngineHooks:
     def on_finish(self, job: Job, now: float) -> None: ...
     def on_requeue(self, job: Job, now: float) -> None: ...
     def on_tick(self, now: float, engine: "SchedulerEngine") -> None: ...
+
+    def on_decision(self, jobs: list[Job], order: list[int], now: float,
+                    engine: "SchedulerEngine") -> None:
+        """One prioritizer decision: ``jobs`` is the ranking window handed
+        to the prioritizer, ``order`` its returned permutation (index 0 =
+        scheduled first).  Fired on both engine paths right after ranking —
+        this is how the streaming RL episode cutter (``repro.rl``) aligns
+        rewards with recorded policy steps.  Observational only."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -601,6 +614,14 @@ class SchedulerEngine:
         return False
 
     # ---------------------------------------------------------- scheduling ----
+    def _fire_decision(self, queue: list[Job], order: list[int]) -> None:
+        """Notify decision observers.  ``getattr``-guarded because hooks are
+        duck-typed (pre-existing observers may not define ``on_decision``)."""
+        for h in self.hooks:
+            fn = getattr(h, "on_decision", None)
+            if fn is not None:
+                fn(queue, order, self.now, self)
+
     def _try_schedule(self) -> None:
         if not self.optimized:
             return self._try_schedule_naive()
@@ -618,6 +639,8 @@ class SchedulerEngine:
             else:
                 order = prioritizer.rank(queue, cluster, self.now)
             self.decisions += 1
+            if self.hooks:
+                self._fire_decision(queue, order)
             top = queue[order[0]]
             rest = [queue[i] for i in order[1:1 + self.lookahead_k]]
             placement = self._alloc_for(top, rest)
@@ -659,6 +682,8 @@ class SchedulerEngine:
                 return
             order = prioritizer.rank(queue, cluster, self.now)
             self.decisions += 1
+            if self.hooks:
+                self._fire_decision(queue, order)
             top = queue[order[0]]
             rest = [queue[i] for i in order[1:1 + self.lookahead_k]]
             placement = self._alloc_for(top, rest)

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Callable
 
 from repro.core.faults import FaultModel
 from repro.core.metrics import BatchResult
@@ -41,18 +42,37 @@ class StreamResult:
 
 class SlaLanePrioritizer:
     """Generic SLA bypass lane (Sec. 3.1.2) over any base prioritizer:
-    SLA-bound users' jobs schedule first, ranked FCFS among themselves."""
+    SLA-bound users' jobs schedule first, ranked FCFS among themselves.
+
+    Exposes ``rank_window`` so the engine's incrementally-maintained field
+    arrays survive the wrapper: the non-SLA partition is handed to the base
+    as a row-subset ``WindowFields`` instead of forcing the base back onto
+    per-job attribute gathering (must rank identically to ``rank``)."""
 
     def __init__(self, base: Prioritizer, sla_users: frozenset[int]):
         self.base = base
         self.sla_users = sla_users
         self.use_estimates = base.use_estimates
+        self._base_rank_window = getattr(base, "rank_window", None)
 
-    def rank(self, jobs, cluster, now):
+    def _split(self, jobs):
         sla = [i for i, j in enumerate(jobs) if j.user in self.sla_users]
         rest = [i for i, j in enumerate(jobs) if j.user not in self.sla_users]
         sla.sort(key=lambda i: (jobs[i].submit_time, jobs[i].job_id))
+        return sla, rest
+
+    def rank(self, jobs, cluster, now):
+        sla, rest = self._split(jobs)
         sub = self.base.rank([jobs[i] for i in rest], cluster, now)
+        return sla + [rest[i] for i in sub]
+
+    def rank_window(self, jobs, cluster, now, fields):
+        sla, rest = self._split(jobs)
+        if self._base_rank_window is not None and fields is not None:
+            sub = self._base_rank_window([jobs[i] for i in rest], cluster,
+                                         now, fields.take(rest))
+        else:
+            sub = self.base.rank([jobs[i] for i in rest], cluster, now)
         return sla + [rest[i] for i in sub]
 
     def observe_finish(self, job):
@@ -80,6 +100,7 @@ class QuotaPrioritizer(EngineHooks):
         self.incremental = incremental
         self.engine: SchedulerEngine | None = None   # attached by the driver
         self._usage: dict[int, int] = {}   # vc -> running GPUs (hook-fed)
+        self._base_rank_window = getattr(base, "rank_window", None)
 
     # -- EngineHooks: usage tracks exactly the engine's running set ----------
     def on_start(self, job, now):
@@ -112,8 +133,7 @@ class QuotaPrioritizer(EngineHooks):
                 used[job.vc] = used.get(job.vc, 0) + job.num_gpus
         return used
 
-    def rank(self, jobs, cluster, now):
-        order = self.base.rank(jobs, cluster, now)
+    def _gate(self, jobs, cluster, order):
         used = self._vc_usage()
         total = max(int(cluster.total_gpus.sum()), 1)
         over = {vc for vc, q in self.quotas.items()
@@ -121,6 +141,19 @@ class QuotaPrioritizer(EngineHooks):
         under = [i for i in order if jobs[i].vc not in over]
         demoted = [i for i in order if jobs[i].vc in over]
         return under + demoted
+
+    def rank(self, jobs, cluster, now):
+        return self._gate(jobs, cluster, self.base.rank(jobs, cluster, now))
+
+    def rank_window(self, jobs, cluster, now, fields):
+        """Full-window field pass-through to the base (the quota gate itself
+        is a stable partition of the base order, so gating the fields-path
+        ranking is bit-identical to gating ``base.rank``)."""
+        if self._base_rank_window is not None and fields is not None:
+            order = self._base_rank_window(jobs, cluster, now, fields)
+        else:
+            order = self.base.rank(jobs, cluster, now)
+        return self._gate(jobs, cluster, order)
 
     def observe_finish(self, job):
         self.base.observe_finish(job)
@@ -157,6 +190,7 @@ def run_stream(
     chunked_submit: bool = False,
     hooks: tuple[EngineHooks, ...] = (),
     optimized: bool = True,
+    on_window: "Callable[[SchedulerEngine, float, int], None] | None" = None,
 ) -> StreamResult:
     """Replay ``jobs`` through a fresh engine in rescan-interval windows.
 
@@ -164,6 +198,11 @@ def run_stream(
     before stepping past them (true streaming ingestion); otherwise the whole
     stream is registered upfront (identical schedule either way — arrivals
     only take effect at their event instant).
+
+    ``on_window(engine, window_edge, windows)`` fires after every *processed*
+    rescan window (hopped-over empty windows don't fire) — the streaming RL
+    trainer uses it to cut fixed-horizon episodes at window boundaries.  The
+    callback must not mutate engine state.
     """
     all_hooks = tuple(hooks) + ((telemetry,) if telemetry is not None else ())
     if isinstance(prioritizer, QuotaPrioritizer) and prioritizer.incremental:
@@ -210,6 +249,8 @@ def run_stream(
         engine.step(t + iv)
         t += iv
         windows += 1
+        if on_window is not None:
+            on_window(engine, t, windows)
     if telemetry is not None:
         telemetry.final(engine)
     return StreamResult(batch=engine.result(), telemetry=telemetry,

@@ -152,6 +152,12 @@ class RollingTelemetry:
         )
 
     # ------------------------------------------------------------ summaries ----
+    def probe(self, now: float, engine) -> TelemetrySample:
+        """Compute a rolling-window sample at ``now`` without appending it
+        to ``samples`` — the streaming-RL reward shaper polls this at every
+        rescan-window boundary."""
+        return self._sample(now, engine)
+
     def final(self, engine) -> TelemetrySample:
         """Force one sample at the current clock (end-of-run summary)."""
         now = self._last_t if self._last_t is not None else 0.0

@@ -111,6 +111,58 @@ def test_differential_synthetic_streams(seed):
     assert opt == ref
 
 
+@pytest.mark.parametrize("name", ["multi-tenant", "sla-mix"])
+@pytest.mark.parametrize("policy", ["slurm-mf", "qssf"])
+def test_differential_tenancy_wrapped_rank_window(name, policy):
+    """Tenancy wrappers (SLA lane / VC-quota gate) now expose ``rank_window``
+    serving engine-maintained field views (incl. the new user/vc arrays) to
+    their base — the wrapped fields path must schedule bit-identically to
+    the naive scalar path."""
+    from repro.sched import run_stream as _rs, wrap_tenancy
+
+    run = get_scenario(name).build(160, seed=7)
+    outs = []
+    for optimized in (True, False):
+        pri = PolicyPrioritizer(make_policy(policy), batch=optimized)
+        pri = wrap_tenancy(pri, run.sla_users, run.vc_quotas)
+        sr = _rs(run.spec, [j.clone_pending() for j in run.jobs], pri,
+                 rescan_interval=60.0, allocator="pack",
+                 fault_model=run.fault_model, chunked_submit=True,
+                 optimized=optimized)
+        outs.append({j.job_id: (j.start_time, j.finish_time)
+                     for j in sr.batch.jobs})
+    assert outs[0] == outs[1]
+
+
+def test_rank_window_fields_match_rank_for_all_policies():
+    """Field-array scoring (incl. user/vc served from the indexed queue)
+    must order every built-in policy's window identically to the per-job
+    scalar path, including history-dependent state (fair-share usage, QSSF
+    runtime history)."""
+    from repro.core.policies import BASE_POLICIES
+    from repro.core.prioritizer import WindowFields
+    from repro.core.cluster import ClusterState
+
+    run = get_scenario("multi-tenant").build(96, seed=13)
+    jobs = run.jobs
+    cluster = ClusterState(run.spec)
+    now = jobs[-1].submit_time + 3600.0
+    for policy in BASE_POLICIES:
+        pa = PolicyPrioritizer(make_policy(policy), batch=True)
+        pb = PolicyPrioritizer(make_policy(policy), batch=False)
+        # warm history-dependent policies with identical finish streams
+        for j in jobs[:32]:
+            fin = j.clone_pending()
+            fin.start_time, fin.finish_time = j.submit_time, \
+                j.submit_time + j.runtime
+            pa.observe_finish(fin)
+            pb.observe_finish(fin)
+        window = jobs[32:]
+        fields = WindowFields.from_jobs(window)
+        assert pa.rank_window(window, cluster, now, fields) == \
+            pb.rank(window, cluster, now), policy
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(min_value=0, max_value=10_000),
        st.sampled_from(sorted(list_scenarios())),

@@ -5,12 +5,64 @@ from conftest import hypothesis_or_stubs
 given, settings, st = hypothesis_or_stubs()
 
 from repro.core import ClusterState, Job, choose_allocation, make_cluster
-from repro.core.milp import _greedy_choice
+from repro.core.milp import (_SKELETONS, _greedy_choice, _solve_milp,
+                             _solve_milp_reference)
 
 
 def mk(i, gpus, cpus=0, mem=0.0):
     return Job(job_id=i, user=0, submit_time=0, runtime=100, est_runtime=100,
                num_gpus=gpus, req_cpus=cpus, req_mem_gb=mem)
+
+
+def test_skeleton_solver_matches_reference_differential():
+    """The memoized constraint-skeleton solver (bounds filled in place) must
+    return the identical MILPResult as the per-call dense builder across
+    random cluster states, job shapes, and look-ahead depths — including
+    repeated hits on the same cached skeleton."""
+    rng = np.random.default_rng(42)
+    checked = 0
+    for trace in ("helios", "philly", "alibaba"):
+        for _ in range(12):
+            c = ClusterState(make_cluster(trace))
+            for i in range(int(rng.integers(0, 6))):
+                filler = mk(1000 + i, int(rng.integers(1, 8)),
+                            cpus=int(rng.integers(0, 16)),
+                            mem=float(rng.integers(0, 64)))
+                pl = c.find_placement(filler, "pack")
+                if pl:
+                    c.allocate(filler, pl)
+            j = mk(0, int(rng.integers(1, 17)),
+                   cpus=int(rng.integers(0, 32)),
+                   mem=float(rng.integers(0, 128)))
+            ways = c.candidate_ways(j)
+            if len(ways) < 2:
+                continue
+            look = [mk(10 + i, int(rng.integers(1, 9)))
+                    for i in range(int(rng.integers(0, 5)))]
+            a = _solve_milp(c, j, ways[:2], look)
+            b = _solve_milp_reference(c, j, ways[:2], look)
+            assert (a is None) == (b is None)
+            if a is not None:
+                assert a.placement == b.placement
+                assert a.way_index == b.way_index
+                assert a.objective == pytest.approx(b.objective, abs=1e-9)
+                assert a.lookahead_scheduled == b.lookahead_scheduled
+            checked += 1
+    assert checked >= 10
+
+
+def test_skeleton_cache_is_bounded_and_reused():
+    """One skeleton per (n_nodes, gpn, K): repeated solves on the same
+    cluster shape reuse the cached structure instead of growing the dict."""
+    c = ClusterState(make_cluster("helios"))
+    j = mk(0, 4)
+    ways = c.candidate_ways(j)
+    look = [mk(10, 2), mk(11, 2)]
+    before = len(_SKELETONS)
+    for _ in range(5):
+        assert _solve_milp(c, j, ways[:2], look) is not None
+    after = len(_SKELETONS)
+    assert after - before <= 1
 
 
 def test_single_way_short_circuit():

@@ -1,0 +1,154 @@
+"""Direct unit pins for repro.sched.telemetry rolling windows.
+
+The streaming-RL reward shaper consumes these numbers (wait percentiles,
+windowed utilization, backlog) at every rescan-window boundary, so window
+eviction, percentile edge cases, and empty-window guards need direct pins —
+not just the end-to-end scenario goldens.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.types import Job
+from repro.sched import RollingTelemetry, jain_index
+
+
+class _FakeCluster:
+    def __init__(self, total=(8, 8), free=(8, 8)):
+        self.total_gpus = np.array(total, dtype=np.int64)
+        self.free_gpus = np.array(free, dtype=np.int64)
+
+
+class _FakeEngine:
+    """Just enough engine surface for RollingTelemetry hooks/samples."""
+
+    def __init__(self, cluster=None):
+        self.cluster = cluster or _FakeCluster()
+        self.pending = []
+        self.running = {}
+
+
+def _finished_job(jid, submit, start, finish, vc=0, gpus=1):
+    j = Job(job_id=jid, user=0, submit_time=submit, runtime=finish - start,
+            est_runtime=finish - start, num_gpus=gpus, vc=vc)
+    j.start_time = start
+    j.finish_time = finish
+    return j
+
+
+def _tick(tel, eng, now, busy_free=None):
+    if busy_free is not None:
+        eng.cluster.free_gpus = np.array(busy_free, dtype=np.int64)
+    tel.on_tick(now, eng)
+
+
+def test_window_eviction_drops_old_finishes():
+    tel = RollingTelemetry(window=1000.0, sample_interval=math.inf)
+    eng = _FakeEngine()
+    _tick(tel, eng, 0.0)
+    for t in (100.0, 200.0, 300.0):
+        tel.on_finish(_finished_job(int(t), 0.0, t - 50.0, t), t)
+        _tick(tel, eng, t)
+    assert len(tel._fin) == 3
+    # advancing past 100+window must evict exactly the first record
+    _tick(tel, eng, 1150.0)
+    assert [r.t for r in tel._fin] == [200.0, 300.0]
+    s = tel._sample(1150.0, eng)
+    assert s.finished_in_window == 2
+    # ... and total_finished keeps counting everything ever finished
+    assert tel.total_finished == 3
+
+
+def test_requeue_eviction():
+    tel = RollingTelemetry(window=500.0, sample_interval=math.inf)
+    eng = _FakeEngine()
+    _tick(tel, eng, 0.0)
+    tel.on_requeue(_finished_job(1, 0.0, 10.0, 20.0), 100.0)
+    tel.on_requeue(_finished_job(2, 0.0, 10.0, 20.0), 400.0)
+    _tick(tel, eng, 450.0)
+    assert tel._sample(450.0, eng).requeues == 2
+    _tick(tel, eng, 700.0)   # 100 < 700 - 500 evicts the first
+    assert tel._sample(700.0, eng).requeues == 1
+
+
+def test_single_record_percentiles_degenerate():
+    """One finished job: every percentile equals its value."""
+    tel = RollingTelemetry(window=1e6, sample_interval=math.inf)
+    eng = _FakeEngine()
+    _tick(tel, eng, 0.0)
+    tel.on_finish(_finished_job(1, 0.0, 30.0, 130.0), 130.0)  # wait 30, jct 130
+    _tick(tel, eng, 130.0)
+    s = tel._sample(130.0, eng)
+    assert s.wait_p50 == s.wait_p95 == s.wait_p99 == pytest.approx(30.0)
+    assert s.jct_p50 == s.jct_p95 == s.jct_p99 == pytest.approx(130.0)
+    assert s.finished_in_window == 1
+
+
+def test_empty_window_guards():
+    """No finishes / no segments: percentiles and throughput read 0, the
+    utilization falls back to the last observed busy fraction — never NaN."""
+    tel = RollingTelemetry(window=3600.0, sample_interval=math.inf)
+    eng = _FakeEngine()
+    s = tel._sample(0.0, eng)
+    for v in (s.jct_p50, s.jct_p99, s.wait_p50, s.wait_p99,
+              s.throughput_jph, s.utilization):
+        assert v == 0.0 and np.isfinite(v)
+    assert s.vc_fairness == 1.0
+    # after one tick with a half-busy cluster but still zero span, the
+    # utilization guard returns the instantaneous busy fraction
+    _tick(tel, eng, 10.0, busy_free=(4, 4))
+    assert tel._windowed_util(10.0) == pytest.approx(0.5)
+
+
+def test_windowed_util_exact_integration():
+    """Utilization is integrated piecewise-exactly between ticks."""
+    tel = RollingTelemetry(window=1000.0, sample_interval=math.inf)
+    eng = _FakeEngine()
+    _tick(tel, eng, 0.0, busy_free=(8, 8))     # busy 0.0 for [0, 100)
+    _tick(tel, eng, 100.0, busy_free=(0, 8))   # busy 0.5 for [100, 300)
+    _tick(tel, eng, 300.0, busy_free=(0, 0))   # busy 1.0 for [300, 400)
+    _tick(tel, eng, 400.0)
+    want = (100 * 0.0 + 200 * 0.5 + 100 * 1.0) / 400.0
+    assert tel._windowed_util(400.0) == pytest.approx(want)
+    # segments fully left of the window are clipped out exactly
+    _tick(tel, eng, 1150.0)   # busy 1.0 for [400, 1150)
+    lo = 1150.0 - 1000.0
+    want = (0.5 * (300 - lo) + 1.0 * (1150 - 300)) / 1000.0
+    assert tel._windowed_util(1150.0) == pytest.approx(want)
+
+
+def test_sample_interval_and_final():
+    """Samples are emitted on the simulated-time grid; final() always
+    appends one closing sample."""
+    tel = RollingTelemetry(window=1e6, sample_interval=100.0)
+    eng = _FakeEngine()
+    _tick(tel, eng, 0.0)
+    for t in (50.0, 120.0, 250.0):
+        _tick(tel, eng, t)
+    assert len(tel.samples) == 2          # at >=100 and >=220
+    tel.final(eng)
+    assert len(tel.samples) == 3
+    assert tel.samples[-1].time == 250.0
+
+
+def test_vc_fairness_from_gpu_seconds():
+    tel = RollingTelemetry(window=1e6, sample_interval=math.inf)
+    eng = _FakeEngine()
+    _tick(tel, eng, 0.0)
+    # two VCs, equal GPU-seconds -> Jain == 1.0
+    tel.on_finish(_finished_job(1, 0.0, 0.0, 100.0, vc=0, gpus=2), 100.0)
+    tel.on_finish(_finished_job(2, 0.0, 0.0, 200.0, vc=1, gpus=1), 200.0)
+    _tick(tel, eng, 200.0)
+    s = tel._sample(200.0, eng)
+    assert s.vc_fairness == pytest.approx(1.0)
+    # skewed shares drop below 1
+    tel.on_finish(_finished_job(3, 0.0, 0.0, 300.0, vc=0, gpus=8), 300.0)
+    s = tel._sample(300.0, eng)
+    assert s.vc_fairness < 1.0
+
+
+def test_jain_index_reference_values():
+    assert jain_index([5.0, 5.0, 5.0, 5.0]) == pytest.approx(1.0)
+    assert jain_index([1.0, 3.0]) == pytest.approx(16.0 / 20.0)
+    assert jain_index([]) == 1.0

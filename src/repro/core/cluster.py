@@ -22,12 +22,32 @@ placement actually depends on: ``(num_gpus, gpu_type, req_cpus, req_mem_gb)``.
 Caching is opt-out by default because callers that mutate the resource arrays
 directly (some tests do) would otherwise read stale entries; the scheduler
 engine owns its ``ClusterState`` and constructs it with ``cache=True``.
+
+Elastic capacity
+----------------
+The autoscaling layer (``repro.scale``) mutates capacity at runtime:
+
+- ``add_node(spec)`` appends a node (arrays grow, SKU masks rebuild) and
+  returns its node id; ids are stable for the cluster's lifetime.
+- ``remove_node(node_id)`` retires an idle node immediately; a busy node is
+  **cordoned** instead (drain semantics): excluded from placement and the
+  feasibility tallies, but its running jobs keep their GPUs and the node
+  still counts as *provisioned*.  Once its last allocation is released the
+  node auto-retires.  ``uncordon_node`` cancels a pending drain (scale-up
+  reuses draining nodes before adding new ones).
+- retired nodes are permanently excluded everywhere (placement, tallies,
+  utilization, provisioned totals) but keep their array slot so node ids in
+  live placements never shift.
+
+Every capacity mutation bumps ``topo_version`` (and therefore ``version``)
+exactly like ``fail_node``/``recover_node``, so the per-version feasibility
+caches and memoized ratios can never serve pre-mutation answers.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.types import ClusterSpec, Job
+from repro.core.types import ClusterSpec, Job, NodeSpec
 
 Placement = dict[int, int]  # node_id -> gpus taken
 
@@ -52,13 +72,11 @@ class ClusterState:
         self.speeds = np.array([nd.speed for nd in spec.nodes], dtype=np.float64)
         self.total_gpus = np.array([nd.num_gpus for nd in spec.nodes], dtype=np.int64)
         self.node_down = np.zeros(n, dtype=bool)   # fault injection
-        # static per-SKU node-index masks (node SKUs never change at runtime)
-        self._sku_masks: dict[str, np.ndarray] = {
-            t: self.gpu_types == t for t in set(str(t) for t in self.gpu_types)}
-        self._all_mask = np.ones(n, dtype=bool)
-        self._no_mask = np.zeros(n, dtype=bool)
-        self._total_by_type = {t: int(self.total_gpus[m].sum())
-                               for t, m in self._sku_masks.items()}
+        self.cordoned = np.zeros(n, dtype=bool)    # draining for removal
+        self.retired = np.zeros(n, dtype=bool)     # removed (slot kept)
+        # per-SKU node-index masks (rebuilt only when add_node grows the
+        # cluster; a node's SKU never changes in place)
+        self._rebuild_static_masks()
         # version counters: `version` bumps on every mutation; `topo_version`
         # only when node up/down topology changes (eligibility masks depend
         # solely on topology, not on free-resource levels)
@@ -70,6 +88,16 @@ class ClusterState:
         self._eligible_cache: dict[str, np.ndarray] = {}
         self._tallies: tuple[int, dict[str, int]] | None = None
         self._up_ratios: tuple[float, float] | None = None
+        self._prov_totals: tuple[int, tuple[int, dict[str, int]]] | None = None
+
+    def _rebuild_static_masks(self) -> None:
+        n = len(self.gpu_types)
+        self._sku_masks: dict[str, np.ndarray] = {
+            t: self.gpu_types == t for t in set(str(t) for t in self.gpu_types)}
+        self._all_mask = np.ones(n, dtype=bool)
+        self._no_mask = np.zeros(n, dtype=bool)
+        self._total_by_type = {t: int(self.total_gpus[m].sum())
+                               for t, m in self._sku_masks.items()}
 
     # ---------------------------------------------------------------- caching --
     def _bump(self) -> None:
@@ -89,11 +117,15 @@ class ClusterState:
 
     def load_from(self, other: "ClusterState") -> None:
         """Copy the mutable resource state of ``other`` in place (scratch
-        reuse for what-if simulation) and invalidate all caches."""
+        reuse for what-if simulation) and invalidate all caches.  Requires
+        equal node counts — scratch owners rebuild when ``add_node`` grew
+        the source cluster."""
         np.copyto(self.free_gpus, other.free_gpus)
         np.copyto(self.free_cpus, other.free_cpus)
         np.copyto(self.free_mem, other.free_mem)
         np.copyto(self.node_down, other.node_down)
+        np.copyto(self.cordoned, other.cordoned)
+        np.copyto(self.retired, other.retired)
         self._bump_topology()
 
     # ------------------------------------------------------------------ queries --
@@ -111,18 +143,33 @@ class ClusterState:
     def _compute_eligible(self, gpu_type: str) -> np.ndarray:
         base = self._all_mask if gpu_type == "any" \
             else self._sku_masks.get(gpu_type, self._no_mask)
-        return base & ~self.node_down
+        return base & self.placeable_mask()
+
+    def placeable_mask(self) -> np.ndarray:
+        """Up, not draining, not removed: the nodes placement may use.
+        Shared by the engine's schedulability prefilter, the RL feature
+        builder, and the autoscaler's idle-capacity scan.  Treat the
+        returned array as read-only."""
+        return ~(self.node_down | self.cordoned | self.retired)
 
     def nodes_for(self, job: Job) -> np.ndarray:
         """Boolean mask of nodes whose SKU satisfies the job's request and are up."""
         return self.eligible_mask(job.gpu_type)
 
+    def sku_mask(self, gpu_type: str) -> np.ndarray:
+        """Static boolean node mask for one SKU (``any`` = all nodes);
+        ignores up/cordon/retire state.  Treat as read-only."""
+        if gpu_type == "any":
+            return self._all_mask
+        return self._sku_masks.get(gpu_type, self._no_mask)
+
     def free_gpu_tallies(self) -> tuple[int, dict[str, int]]:
-        """``(total_free_on_up_nodes, {sku: free_gpus_on_up_nodes})`` —
-        cached per version so saturated-queue prefilters are O(1)."""
+        """``(total_free_placeable, {sku: free_gpus_placeable})`` over up,
+        non-cordoned, non-retired nodes — cached per version so
+        saturated-queue prefilters are O(1)."""
         if self.cache_enabled and self._tallies is not None:
             return self._tallies
-        up = ~self.node_down
+        up = self.placeable_mask()
         total = int(self.free_gpus[up].sum())
         by_type = {t: int(self.free_gpus[m & up].sum())
                    for t, m in self._sku_masks.items()}
@@ -239,12 +286,22 @@ class ClusterState:
         for i, g in placement.items():
             if self.free_gpus[i] + g > self.total_gpus[i]:
                 raise RuntimeError(f"double release on node {i}")
+        drained = False
         for i, g in placement.items():
             frac = g / max(job.num_gpus, 1)
             self.free_gpus[i] += g
             self.free_cpus[i] += round(job.req_cpus * frac)
             self.free_mem[i] += job.req_mem_gb * frac
-        self._bump()
+            # drain semantics: a cordoned node whose last allocation just
+            # left retires on the spot (capacity leaves the provisioned pool)
+            if self.cordoned[i] and self.free_gpus[i] == self.total_gpus[i]:
+                self.cordoned[i] = False
+                self.retired[i] = True
+                drained = True
+        if drained:
+            self._bump_topology()
+        else:
+            self._bump()
 
     def placement_speed(self, placement: Placement) -> float:
         """Effective speed of a gang placement = slowest member SKU."""
@@ -259,18 +316,88 @@ class ClusterState:
         self.node_down[node_id] = False
         self._bump_topology()
 
+    # -------------------------------------------------------- elastic capacity --
+    def add_node(self, node: NodeSpec) -> int:
+        """Append a node (autoscaling scale-up).  The given spec's
+        ``node_id`` is ignored; the assigned id (== array index) is
+        returned and also recorded in ``spec.nodes`` so rebuilt scratch
+        clusters see the same topology."""
+        nid = len(self.spec.nodes)
+        node = NodeSpec(node_id=nid, gpu_type=node.gpu_type,
+                        num_gpus=node.num_gpus, num_cpus=node.num_cpus,
+                        mem_gb=node.mem_gb, speed=node.speed)
+        self.spec.nodes.append(node)
+        self.free_gpus = np.append(self.free_gpus, node.num_gpus)
+        self.free_cpus = np.append(self.free_cpus, node.num_cpus)
+        self.free_mem = np.append(self.free_mem, node.mem_gb)
+        self.gpu_types = np.append(self.gpu_types, node.gpu_type)
+        self.speeds = np.append(self.speeds, node.speed)
+        self.total_gpus = np.append(self.total_gpus, node.num_gpus)
+        self.node_down = np.append(self.node_down, False)
+        self.cordoned = np.append(self.cordoned, False)
+        self.retired = np.append(self.retired, False)
+        self._rebuild_static_masks()
+        self._bump_topology()
+        return nid
+
+    def remove_node(self, node_id: int) -> bool:
+        """Retire a node (autoscaling scale-down).  An idle node retires
+        immediately (returns ``True``); a node with live allocations is
+        cordoned instead — excluded from placement but still provisioned —
+        and auto-retires when its last job releases (returns ``False``)."""
+        if not 0 <= node_id < len(self.total_gpus):
+            raise ValueError(f"no such node {node_id}")
+        if self.retired[node_id]:
+            raise ValueError(f"node {node_id} already retired")
+        if self.free_gpus[node_id] == self.total_gpus[node_id]:
+            self.cordoned[node_id] = False
+            self.retired[node_id] = True
+            self._bump_topology()
+            return True
+        self.cordoned[node_id] = True
+        self._bump_topology()
+        return False
+
+    def uncordon_node(self, node_id: int) -> None:
+        """Cancel a pending drain (scale-up re-admits a draining node
+        before paying for a fresh one).  No-op unless cordoned."""
+        if self.cordoned[node_id]:
+            self.cordoned[node_id] = False
+            self._bump_topology()
+
+    def provisioned_gpu_totals(self) -> tuple[int, dict[str, int]]:
+        """``(total, {sku: total})`` GPUs on non-retired nodes — the
+        capacity currently paid for (cordoned/draining nodes included).
+        Memoized per ``topo_version`` (capacity only moves on topology
+        mutations, never on allocate/release that doesn't drain a cordon)."""
+        if self._prov_totals is not None \
+                and self._prov_totals[0] == self.topo_version:
+            return self._prov_totals[1]
+        mask = ~self.retired
+        totals = (int(self.total_gpus[mask].sum()),
+                  {t: int(self.total_gpus[m & mask].sum())
+                   for t, m in self._sku_masks.items()})
+        self._prov_totals = (self.topo_version, totals)
+        return totals
+
     # ------------------------------------------------------------------ stats ---
     def _up_ratio_pair(self) -> tuple[float, float]:
         """(utilization, fragmentation) over up nodes — memoized per version
         so per-job snapshot refreshes during a routed burst (no cluster
-        mutation in between) are dict hits, not O(nodes) reductions."""
+        mutation in between) are dict hits, not O(nodes) reductions.
+
+        Utilization counts up *provisioned* nodes (cordoned nodes still
+        hold busy GPUs the operator pays for); fragmentation counts only
+        placeable free GPUs (free capacity on a draining node cannot host
+        anything, so it must not read as usable-but-fragmented)."""
         if self.cache_enabled and self._up_ratios is not None:
             return self._up_ratios
-        up = ~self.node_down
+        up = ~(self.node_down | self.retired)
         tot = int(self.total_gpus[up].sum())
-        free = self.free_gpus[up]
+        total_busy = float((self.total_gpus[up] - self.free_gpus[up]).sum())
+        util = total_busy / tot if tot > 0 else 0.0
+        free = self.free_gpus[up & ~self.cordoned]
         total_free = float(free.sum())
-        util = (tot - total_free) / tot if tot > 0 else 0.0
         frag = 0.0
         if total_free > 0:
             # sum of squares is maximal when all free GPUs sit on one node
@@ -288,8 +415,10 @@ class ClusterState:
         vanished capacity.  Guarded against zero-GPU / empty clusters."""
         if up_only:
             return self._up_ratio_pair()[0]
-        tot = int(self.total_gpus.sum())
-        return float((self.total_gpus - self.free_gpus).sum() / max(tot, 1))
+        mask = ~self.retired
+        tot = int(self.total_gpus[mask].sum())
+        return float((self.total_gpus[mask] - self.free_gpus[mask]).sum()
+                     / max(tot, 1))
 
     def fragmentation(self, up_only: bool = False) -> float:
         """Cluster Fragmentation Factor, Eq. (3) (normalized to [0, 1]).
@@ -298,10 +427,11 @@ class ClusterState:
         Returns 0.0 for zero-free / zero-GPU / empty clusters."""
         if up_only:
             return self._up_ratio_pair()[1]
-        total_free = float(self.free_gpus.sum())
+        free = self.free_gpus[~self.retired]
+        total_free = float(free.sum())
         if total_free <= 0:
             return 0.0
         # sum of squares is maximal when all free GPUs sit on one node
-        conc = float((self.free_gpus.astype(np.float64) ** 2).sum()) \
+        conc = float((free.astype(np.float64) ** 2).sum()) \
             / (total_free ** 2)
         return 1.0 - conc

@@ -72,9 +72,20 @@ class RLPrioritizer:
             self.record = record
 
     def rank(self, jobs: list[Job], cluster: ClusterState, now: float) -> list[int]:
+        return self._rank(jobs, cluster, now, None)
+
+    def rank_window(self, jobs: list[Job], cluster: ClusterState, now: float,
+                    fields) -> list[int]:
+        """``rank`` over the engine's contiguous ``WindowFields`` views: the
+        FBM feature matrix is built with vectorized column ops instead of
+        the O(window * 17) scalar loop — bit-identical features, hence
+        bit-identical actions and ranking (differential-pinned)."""
+        return self._rank(jobs, cluster, now, fields)
+
+    def _rank(self, jobs, cluster, now, fields) -> list[int]:
         ov, cv, mask = build_state(jobs, cluster, now,
                                    use_estimates=self.use_estimates,
-                                   raw=self.raw_features)
+                                   raw=self.raw_features, fields=fields)
         action, logits = self.agent.act(ov, cv, mask, explore=self.explore,
                                         record=self.explore and self.record)
         n = min(len(jobs), MAX_QUEUE_SIZE)

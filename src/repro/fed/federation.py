@@ -124,6 +124,7 @@ class FederatedScheduler:
         sample_interval: float = 600.0,
         router_seed: int = 0,
         optimized: bool = True,
+        autoscalers: Sequence | None = None,
     ):
         if not clusters:
             raise ValueError("a federation needs at least one cluster")
@@ -132,6 +133,16 @@ class FederatedScheduler:
         if len(fms) != len(clusters):
             raise ValueError(f"{len(clusters)} clusters but {len(fms)} "
                              f"fault models")
+        self.autoscalers = list(autoscalers) if autoscalers is not None \
+            else [None] * len(clusters)
+        if len(self.autoscalers) != len(clusters):
+            raise ValueError(f"{len(clusters)} clusters but "
+                             f"{len(self.autoscalers)} autoscalers")
+        # scale-ups append to each member's spec.nodes: autoscaled members
+        # get their own spec copy so caller-held fleet runs stay replayable
+        clusters = [ClusterSpec(nodes=list(s.nodes), name=s.name)
+                    if a is not None else s
+                    for s, a in zip(clusters, self.autoscalers)]
         self.router = make_router(router, seed=router_seed)
         factory = prioritizer_factory or \
             (lambda i: PolicyPrioritizer(make_policy("fcfs")))
@@ -215,10 +226,37 @@ class FederatedScheduler:
     # ----------------------------------------------------------- stepping ----
     def step(self, until: float = math.inf) -> int:
         """Advance every engine in lockstep to ``until`` (one rescan
-        window); returns total event batches processed."""
+        window); returns total event batches processed.  Per-member
+        autoscalers get their control tick at the window edge, *before* the
+        view refresh — routers see scaled capacity through the refreshed
+        snapshots immediately."""
         processed = sum(e.step(until) for e in self.engines)
+        if until != math.inf:
+            self._control(until)
         self._refresh_views()
         return processed
+
+    def _control(self, now: float, stalled: bool = False) -> int:
+        """Run every attached autoscaler's control tick; returns the number
+        of scale events emitted fleet-wide."""
+        acted = 0
+        for eng, scaler, tel in zip(self.engines, self.autoscalers,
+                                    self.telemetries):
+            if scaler is None:
+                continue
+            if stalled and (eng.done or eng.next_event_time() != math.inf):
+                continue   # only starved members get the override
+            acted += len(scaler.control(eng, now, tel, stalled=stalled))
+        return acted
+
+    def control_stalled(self, now: float) -> int:
+        """Stall override (see ``service.run_stream``): force a scale-up
+        evaluation on members whose queues are starved with a dry event
+        heap.  Refreshes views when anything changed."""
+        acted = self._control(now, stalled=True)
+        if acted:
+            self._refresh_views()
+        return acted
 
     def drain(self) -> int:
         """Process every queued event on every engine (batch semantics) —
@@ -236,7 +274,19 @@ class FederatedScheduler:
 
     def _refresh_views(self) -> None:
         for i, eng in enumerate(self.engines):
-            self._views[i] = ClusterView(self.infos[i], eng.snapshot())
+            snap = eng.snapshot()
+            info = self.infos[i]
+            # capacity staleness guard: the capable-cluster filter reads
+            # static ClusterInfo, so autoscaled capacity must rebuild it —
+            # a job sized for a scaled-up member would otherwise be deemed
+            # unplaceable from pre-scaling totals (and vice versa)
+            if (info.total_gpus != snap.total_gpus
+                    or info.total_by_type != snap.total_gpus_by_type):
+                info = ClusterInfo(index=i, name=info.name,
+                                   total_gpus=snap.total_gpus,
+                                   total_by_type=dict(snap.total_gpus_by_type))
+                self.infos[i] = info
+            self._views[i] = ClusterView(info, snap)
 
     # ------------------------------------------------------------- result ----
     def finalize_telemetry(self) -> None:
@@ -301,24 +351,35 @@ def run_fleet(
     sample_interval: float = 600.0,
     router_seed: int = 0,
     optimized: bool = True,
+    autoscaler_factory: Callable | None = None,
 ) -> FleetStreamResult:
     """Replay a fleet scenario (or a prebuilt ``FleetRun``) through a fresh
     federation in lockstep rescan windows: each window's arrivals are routed
     as the window opens, then every engine steps to the window edge.  Empty
     multi-window gaps are hopped in one grid-aligned jump (same contract as
     ``service.run_stream``).  The fleet's tenant metadata (SLA users, VC
-    quotas) wraps every cluster's prioritizer via ``wrap_tenancy``."""
+    quotas) wraps every cluster's prioritizer via ``wrap_tenancy``.
+
+    ``autoscaler_factory(i, spec)`` builds member ``i``'s ``repro.scale``
+    controller (return ``None`` for fixed-capacity members); controllers
+    tick at every lockstep window edge and routers see scaled capacity
+    through the refreshed views."""
     if isinstance(run, str):
         run = get_fleet_scenario(run).build(num_jobs, seed)
     factory = prioritizer_factory or (
         lambda i: wrap_tenancy(PolicyPrioritizer(make_policy(policy)),
                                run.sla_users, run.vc_quotas))
+    autoscalers = None
+    if autoscaler_factory is not None:
+        autoscalers = [autoscaler_factory(i, spec)
+                       for i, spec in enumerate(run.clusters)]
     fed = FederatedScheduler(
         run.clusters, router, prioritizer_factory=factory,
         allocator=allocator, backfill=backfill,
         fault_models=run.fault_models, queue_window=queue_window,
         telemetry_window=telemetry_window, sample_interval=sample_interval,
-        router_seed=router_seed, optimized=optimized)
+        router_seed=router_seed, optimized=optimized,
+        autoscalers=autoscalers)
 
     jobs = sorted((j.clone_pending() for j in run.jobs),
                   key=lambda j: j.submit_time)
@@ -336,7 +397,15 @@ def run_fleet(
             feed = hi
         if feed >= len(jobs) and (fed.done
                                   or fed.next_event_time() == math.inf):
-            break
+            if fed.done or autoscalers is None:
+                break
+            # starved member(s) with dry heaps: only added capacity can
+            # unblock them (same stall override as service.run_stream)
+            t += iv
+            if not fed.control_stalled(t) \
+                    and fed.next_event_time() == math.inf:
+                break
+            continue
         nxt = fed.next_event_time()
         if feed < len(jobs):
             nxt = min(nxt, jobs[feed].submit_time)

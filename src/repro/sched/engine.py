@@ -165,6 +165,12 @@ class EngineSnapshot:
     ``fragmentation`` (0.0), never NaN — degenerate fleet members must not
     poison snapshot-driven routing.  ``free_gpus_by_type`` is the per-SKU
     free-GPU tally on up nodes (the signal SKU-affinity routing needs).
+
+    ``total_gpus`` / ``total_gpus_by_type`` are the *provisioned* totals
+    (non-retired nodes, cordoned/draining included) — they move when the
+    autoscaling layer adds or removes capacity, and federation routers
+    rebuild their static ``ClusterInfo`` from them so the capable-cluster
+    filter can never run on pre-scaling capacity.
     """
 
     now: float
@@ -180,6 +186,9 @@ class EngineSnapshot:
     backfills: int
     restarts: int
     free_gpus_by_type: dict = dataclasses.field(default_factory=dict)
+    total_gpus: int = 0
+    total_gpus_by_type: dict = dataclasses.field(default_factory=dict)
+    cordoned: int = 0
 
     @property
     def in_flight(self) -> int:
@@ -306,6 +315,7 @@ class SchedulerEngine:
 
     def snapshot(self) -> EngineSnapshot:
         free_up, free_by_type = self.cluster.free_gpu_tallies()
+        prov, prov_by_type = self.cluster.provisioned_gpu_totals()
         return EngineSnapshot(
             now=self.now, submitted=self.submitted,
             num_pending=len(self.pending), num_running=len(self.running),
@@ -316,6 +326,8 @@ class SchedulerEngine:
             decisions=self.decisions, milp_calls=self.milp_calls,
             backfills=self.backfills, restarts=self.restarts,
             free_gpus_by_type=dict(free_by_type),
+            total_gpus=prov, total_gpus_by_type=dict(prov_by_type),
+            cordoned=int(self.cluster.cordoned.sum()),
         )
 
     # ------------------------------------------------------ pending queue ----
@@ -399,6 +411,33 @@ class SchedulerEngine:
             processed += self.step(self.next_event_time())
         return processed
 
+    def reschedule(self, at: float | None = None) -> None:
+        """Run one scheduling pass, outside any event instant.  Capacity
+        mutations (autoscaler ``add_node`` / ``remove_node``) are not
+        simulation events: without a kick, a scale-up that makes a starved
+        queue feasible again would sit idle until the next unrelated event.
+
+        ``at`` advances the clock to the mutation instant (a rescan-window
+        edge, by the service-loop contract always >= every already-processed
+        event and <= every queued one) so jobs started by the pass don't
+        time-travel back to the last event.  Fires ``on_tick`` so telemetry
+        integrates the capacity change at the right instant."""
+        if at is not None and at > self.now:
+            if self._events and self._events[0][0] < at:
+                raise RuntimeError(
+                    f"reschedule at t={at} would skip a queued event at "
+                    f"t={self._events[0][0]}; step() there first")
+            self.now = at
+        # apply fail/recover/straggler transitions due by the (possibly
+        # advanced) clock before scheduling, exactly like step() does — in
+        # the service-loop contract this is a no-op (fault markers are heap
+        # events, already processed up to the window edge), but a caller
+        # rescheduling past a due transition must not place onto it
+        self._handle_faults()
+        self._try_schedule()
+        for h in self.hooks:
+            h.on_tick(self.now, self)
+
     # ------------------------------------------------------------- result ----
     def result(self) -> BatchResult:
         """Aggregate metrics over everything completed so far."""
@@ -463,7 +502,9 @@ class SchedulerEngine:
     def _earliest_start(self, job: Job) -> float:
         if not self.optimized:
             return self._earliest_start_naive(job)
-        if self._scratch is None:
+        if self._scratch is None or \
+                len(self._scratch.total_gpus) != len(self.cluster.total_gpus):
+            # rebuild after add_node grew the cluster (spec reflects it)
             self._scratch = ClusterState(self.spec, cache=True)
         sim = self._scratch
         sim.load_from(self.cluster)
@@ -490,6 +531,8 @@ class SchedulerEngine:
         sim.free_cpus = cluster.free_cpus.copy()
         sim.free_mem = cluster.free_mem.copy()
         sim.node_down = cluster.node_down.copy()
+        sim.cordoned = cluster.cordoned.copy()
+        sim.retired = cluster.retired.copy()
         if sim.find_placement(job, "pack") is not None:
             return self.now
         for jid, (rj, pl, st, fin, sp) in sorted(self.running.items(),
@@ -598,7 +641,7 @@ class SchedulerEngine:
 
     def _any_schedulable_naive(self, queue: list[Job]) -> bool:
         cluster = self.cluster
-        up = ~cluster.node_down
+        up = cluster.placeable_mask()
         free_any = int(cluster.free_gpus[up].sum())
         if free_any == 0:
             return False

@@ -20,17 +20,22 @@ Registry: ``SCENARIOS`` maps name -> ``Scenario``; use
 - ``fault-storm``  — aggressive MTBF + stragglers (checkpoint/restart churn).
 - ``sku-skew``     — demand concentrated on the scarce fast SKU of a
                      heterogeneous cluster (placement-quality stress).
+- ``trace-replay`` — real arrival/duration/GPU-demand rows from a CSV
+                     (normalized ``repro.core.trace`` schema) replayed
+                     through the engine; ``REPRO_TRACE_CSV`` points at an
+                     external trace, defaulting to a packaged fixture.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Callable
 
 import numpy as np
 
 from repro.core.faults import FaultModel
-from repro.core.trace import generate_trace, make_cluster
+from repro.core.trace import generate_trace, load_trace_csv, make_cluster
 from repro.core.types import ClusterSpec, Job
 
 
@@ -183,6 +188,47 @@ def _fault_storm(num_jobs: int, seed: int) -> ScenarioRun:
                     ckpt_interval=900.0, seed=seed + 404)
     return ScenarioRun(name="fault-storm", spec=make_cluster("philly"),
                        jobs=jobs, fault_model=fm)
+
+
+#: Environment override for the trace-replay scenario's CSV source.
+TRACE_CSV_ENV = "REPRO_TRACE_CSV"
+_DEFAULT_TRACE_CSV = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "data", "trace_small.csv")
+
+
+def replay_trace_jobs(path: str, num_jobs: int) -> list[Job]:
+    """Adapt a normalized-CSV trace (``repro.core.trace.load_trace_csv``)
+    into a ``num_jobs``-long stream: rows are truncated or tiled (each copy
+    time-shifted by the trace span plus one mean inter-arrival gap, so
+    copies never interleave) and re-id'd sequentially.  Deterministic — a
+    replay has no seed."""
+    base = load_trace_csv(path)
+    if not base:
+        raise ValueError(f"empty trace CSV: {path!r}")
+    t0 = base[0].submit_time
+    span = base[-1].submit_time - t0
+    period = span + max(span / len(base), 1.0)
+    jobs: list[Job] = []
+    shift = 0.0
+    while len(jobs) < num_jobs:
+        for j in base:
+            if len(jobs) >= num_jobs:
+                break
+            c = j.clone_pending()
+            c.job_id = len(jobs)
+            c.submit_time = j.submit_time + shift
+            jobs.append(c)
+        shift += period
+    return jobs
+
+
+@register("trace-replay",
+          "Replay real arrival/duration/GPU-demand rows from a CSV "
+          "(REPRO_TRACE_CSV, else a packaged fixture) through the engine.")
+def _trace_replay(num_jobs: int, seed: int) -> ScenarioRun:
+    path = os.environ.get(TRACE_CSV_ENV) or _DEFAULT_TRACE_CSV
+    return ScenarioRun(name="trace-replay", spec=make_cluster("helios"),
+                       jobs=replay_trace_jobs(path, num_jobs))
 
 
 @register("sku-skew",

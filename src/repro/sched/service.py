@@ -135,7 +135,9 @@ class QuotaPrioritizer(EngineHooks):
 
     def _gate(self, jobs, cluster, order):
         used = self._vc_usage()
-        total = max(int(cluster.total_gpus.sum()), 1)
+        # provisioned (non-retired) capacity: VC shares must track elastic
+        # cluster size, and equal the raw total whenever autoscaling is off
+        total = max(cluster.provisioned_gpu_totals()[0], 1)
         over = {vc for vc, q in self.quotas.items()
                 if used.get(vc, 0) / total > q}
         under = [i for i in order if jobs[i].vc not in over]
@@ -191,6 +193,7 @@ def run_stream(
     hooks: tuple[EngineHooks, ...] = (),
     optimized: bool = True,
     on_window: "Callable[[SchedulerEngine, float, int], None] | None" = None,
+    autoscaler=None,
 ) -> StreamResult:
     """Replay ``jobs`` through a fresh engine in rescan-interval windows.
 
@@ -203,7 +206,19 @@ def run_stream(
     rescan window (hopped-over empty windows don't fire) — the streaming RL
     trainer uses it to cut fixed-horizon episodes at window boundaries.  The
     callback must not mutate engine state.
+
+    ``autoscaler`` (a ``repro.scale.Autoscaler``) gets one control tick per
+    processed window — exactly where a real deployment would attach it — and
+    a forced *stall* tick whenever the queue is starved with a dry event
+    heap (capacity, not ordering, is then the blocker; see
+    ``Autoscaler.control``).  ``autoscaler=None`` leaves every engine code
+    path bit-identical to the pre-autoscaling service (pinned by tests).
     """
+    if autoscaler is not None:
+        # scale-ups append to spec.nodes: give the engine its own copy so a
+        # caller-held ScenarioRun/spec can be replayed (e.g. static-vs-
+        # autoscaled comparisons) without seeing grown capacity
+        spec = ClusterSpec(nodes=list(spec.nodes), name=spec.name)
     all_hooks = tuple(hooks) + ((telemetry,) if telemetry is not None else ())
     if isinstance(prioritizer, QuotaPrioritizer) and prioritizer.incremental:
         # hook-fed per-VC usage: the engine starts idle, so start from zero
@@ -236,7 +251,18 @@ def run_stream(
             feed = hi
         if feed >= len(jobs) and (engine.done
                                   or engine.next_event_time() == math.inf):
-            break
+            if engine.done or autoscaler is None:
+                break
+            # starved queue with a dry heap: jobs are pending but no event
+            # can ever schedule them — only added capacity can.  Force a
+            # stall-override control tick; if the controller cannot act
+            # (every pool at its max bound) the job is genuinely
+            # unplaceable and the stream ends incomplete.
+            t += iv
+            acted = autoscaler.control(engine, t, telemetry, stalled=True)
+            if not acted and engine.next_event_time() == math.inf:
+                break
+            continue
         nxt = engine.next_event_time()
         if feed < len(jobs):
             nxt = min(nxt, jobs[feed].submit_time)
@@ -249,6 +275,8 @@ def run_stream(
         engine.step(t + iv)
         t += iv
         windows += 1
+        if autoscaler is not None:
+            autoscaler.control(engine, t, telemetry)
         if on_window is not None:
             on_window(engine, t, windows)
     if telemetry is not None:
@@ -270,10 +298,13 @@ def run_scenario(
     telemetry_window: float = 6 * 3600.0,
     sample_interval: float = 600.0,
     enforce_quotas: bool = True,
+    autoscaler=None,
 ) -> StreamResult:
     """Build a registered scenario and stream it through the engine with
     rolling telemetry.  The scenario's SLA population and VC quotas are
-    honoured by wrapping the prioritizer with the matching lane/gate."""
+    honoured by wrapping the prioritizer with the matching lane/gate.
+    ``autoscaler`` attaches a ``repro.scale`` controller to the service
+    loop (one control tick per processed rescan window)."""
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
     run = scenario.build(num_jobs, seed) if isinstance(scenario, Scenario) \
@@ -287,4 +318,5 @@ def run_scenario(
         run.spec, [j.clone_pending() for j in run.jobs], pri,
         rescan_interval=rescan_interval, allocator=allocator,
         backfill=backfill, fault_model=run.fault_model,
-        queue_window=queue_window, telemetry=telemetry, chunked_submit=True)
+        queue_window=queue_window, telemetry=telemetry, chunked_submit=True,
+        autoscaler=autoscaler)

@@ -76,6 +76,14 @@ class RollingTelemetry:
         self._last_busy: float = 0.0
         self._next_sample: float | None = None
         self.total_finished = 0
+        # provisioning cost (autoscaling): exact full-run integrals of
+        # provisioned (non-retired) and busy GPUs over simulated time, plus
+        # the scale events the controller reported via note_scale_events
+        self.provisioned_gpu_s = 0.0
+        self.used_gpu_s = 0.0
+        self.scale_events: list = []
+        self._last_prov = 0.0        # provisioned GPUs at the last tick
+        self._last_busy_gpus = 0.0   # busy GPUs at the last tick
 
     # ------------------------------------------------------------ hook API ----
     def on_submit(self, job: Job, now: float) -> None: ...
@@ -95,12 +103,18 @@ class RollingTelemetry:
             self._last_t = now
             self._next_sample = now + self.sample_interval
         if now > self._last_t:
+            dt = now - self._last_t
             self._segments.append((self._last_t, now, self._last_busy))
+            self.provisioned_gpu_s += dt * self._last_prov
+            self.used_gpu_s += dt * self._last_busy_gpus
         self._last_t = now
-        total = max(int(engine.cluster.total_gpus.sum()), 1)
-        self._last_busy = float(
-            (engine.cluster.total_gpus - engine.cluster.free_gpus).sum()
-        ) / total
+        cluster = engine.cluster
+        mask = ~cluster.retired
+        prov = int(cluster.total_gpus[mask].sum())
+        busy = int((cluster.total_gpus[mask] - cluster.free_gpus[mask]).sum())
+        self._last_prov = float(prov)
+        self._last_busy_gpus = float(busy)
+        self._last_busy = busy / max(prov, 1)
         self._evict(now)
         if now >= self._next_sample:
             self.samples.append(self._sample(now, engine))
@@ -164,6 +178,22 @@ class RollingTelemetry:
         s = self._sample(now, engine)
         self.samples.append(s)
         return s
+
+    def note_scale_events(self, events) -> None:
+        """Record autoscaler actions (provisioning-cost accounting); the
+        driver forwards each control tick's emitted ``ScaleEvent``s."""
+        self.scale_events.extend(events)
+
+    @property
+    def provisioned_gpu_hours(self) -> float:
+        """Integral of provisioned (non-retired) GPUs over simulated time —
+        what an elastic deployment pays for."""
+        return self.provisioned_gpu_s / 3600.0
+
+    @property
+    def used_gpu_hours(self) -> float:
+        """Integral of busy GPUs over simulated time."""
+        return self.used_gpu_s / 3600.0
 
     def peak_queue_len(self) -> int:
         return max((s.queue_len for s in self.samples), default=0)

@@ -1,0 +1,148 @@
+"""Direct unit tests for repro.core.faults (FaultModel / FaultInjector):
+seeded determinism, down->up transition ordering, checkpoint math, and the
+interaction between fault events and cordoned/draining nodes."""
+import math
+
+import pytest
+
+from repro.core import PolicyPrioritizer, make_cluster, make_policy
+from repro.core.faults import FaultInjector, FaultModel
+from repro.core.types import Job
+from repro.sched import SchedulerEngine
+
+
+def _model(**kw):
+    base = dict(mtbf_per_node=6 * 3600.0, repair_time=600.0,
+                straggler_prob=0.0, ckpt_interval=900.0, seed=7)
+    base.update(kw)
+    return FaultModel(**base)
+
+
+def mk_job(i, gpus=1, submit=0.0, runtime=1000.0, gpu_type="any"):
+    return Job(job_id=i, user=0, submit_time=submit, runtime=runtime,
+               est_runtime=runtime, num_gpus=gpus, gpu_type=gpu_type)
+
+
+# ------------------------------------------------------------- determinism ----
+
+
+def test_injector_seeded_determinism():
+    a = FaultInjector(_model(), num_nodes=8, horizon=30 * 86400.0)
+    b = FaultInjector(_model(), num_nodes=8, horizon=30 * 86400.0)
+    assert a.events == b.events and a.events
+    c = FaultInjector(_model(seed=8), num_nodes=8, horizon=30 * 86400.0)
+    assert a.events != c.events
+
+
+def test_events_respect_horizon_and_mtbf_scale():
+    horizon = 30 * 86400.0
+    inj = FaultInjector(_model(), num_nodes=6, horizon=horizon)
+    fails = [t for (t, kind, _) in inj.events if kind == "fail"]
+    assert fails and all(t < horizon for t in fails)
+    # ~ horizon/mtbf failures per node on average; allow wide slack
+    expected = horizon / (6 * 3600.0)
+    per_node = len(fails) / 6
+    assert expected / 2 <= per_node <= expected * 2
+
+
+# ---------------------------------------------------- down->up transitions ----
+
+
+def test_fail_recover_pairing_and_ordering():
+    """Every fail has exactly one matching recover, repair_time later (the
+    exponential draw may re-fail a node before its repair lands, so the
+    sequence need not strictly alternate); pop_due returns events in
+    nondecreasing time order."""
+    inj = FaultInjector(_model(), num_nodes=4, horizon=60 * 86400.0)
+    per_node: dict[int, dict[str, list]] = {}
+    last_t = -math.inf
+    while inj.events:
+        t = inj.next_event_time()
+        for (ft, kind, node) in inj.pop_due(t):
+            assert ft >= last_t - 1e-9
+            last_t = ft
+            per_node.setdefault(node, {}).setdefault(kind, []).append(ft)
+    for node, by_kind in per_node.items():
+        fails = sorted(by_kind.get("fail", []))
+        recs = sorted(by_kind.get("recover", []))
+        assert fails and len(fails) == len(recs)
+        for t_fail, t_rec in zip(fails, recs):
+            assert t_rec == pytest.approx(t_fail + 600.0)
+
+
+def test_straggler_pairing():
+    inj = FaultInjector(_model(straggler_prob=1.0, straggler_duration=500.0),
+                        num_nodes=2, horizon=30 * 86400.0)
+    kinds = {k for (_, k, _) in inj.events}
+    assert kinds == {"slow", "unslow"}
+    slows = sorted((t, n) for (t, k, n) in inj.events if k == "slow")
+    unslows = sorted((t, n) for (t, k, n) in inj.events if k == "unslow")
+    for (ts, ns), (tu, nu) in zip(slows, unslows):
+        assert nu == ns and tu == pytest.approx(ts + 500.0)
+
+
+def test_pop_due_is_monotonic_prefix():
+    inj = FaultInjector(_model(), num_nodes=4, horizon=30 * 86400.0)
+    total = len(inj.events)
+    mid = inj.events[total // 2][0]
+    due = inj.pop_due(mid)
+    assert all(t <= mid + 1e-9 for (t, _, _) in due)
+    assert inj.next_event_time() > mid
+    assert len(due) + len(inj.events) == total
+
+
+def test_checkpointed_progress_boundaries():
+    inj = FaultInjector(_model(), num_nodes=1, horizon=1.0)
+    assert inj.checkpointed_progress(0.0, 1000.0) == 0.0
+    assert inj.checkpointed_progress(899.0, 1000.0) == 0.0   # before 1st ckpt
+    assert inj.checkpointed_progress(900.0, 1000.0) == pytest.approx(0.9)
+    assert inj.checkpointed_progress(5000.0, 1000.0) == 1.0  # clamped
+    assert inj.checkpointed_progress(100.0, 0.0) == 0.0      # degenerate
+
+
+# ------------------------------------------- faults vs cordoned/draining ----
+
+
+def test_fault_kill_on_cordoned_node_completes_the_drain():
+    """A cordoned node whose job is killed by a failure has no allocations
+    left — the drain must complete (auto-retire), and the later recover
+    event must not resurrect the retired slot."""
+    spec = make_cluster("helios")
+    eng = SchedulerEngine(spec, PolicyPrioritizer(make_policy("fcfs")),
+                          allocator="pack",
+                          fault_model=_model(mtbf_per_node=2 * 3600.0,
+                                             repair_time=600.0))
+    eng.submit([mk_job(i, gpus=8, runtime=30 * 3600.0) for i in range(10)])
+    eng.step(1.0)
+    assert eng.snapshot().num_running == 10
+    # cordon a busy node, then let the fault storm roll
+    victim_jid, rec = next(iter(eng.running.items()))
+    (node, _), = rec[1].items()
+    assert eng.cluster.remove_node(node) is False
+    assert bool(eng.cluster.cordoned[node])
+    eng.drain()
+    assert eng.done
+    assert bool(eng.cluster.retired[node])
+    assert not bool(eng.cluster.cordoned[node])
+    # recover events on the retired slot may have fired; capacity stayed out
+    assert not eng.cluster.eligible_mask("any")[node]
+
+
+def test_faults_only_hit_initial_nodes_added_capacity_is_stable():
+    """FaultInjector draws per-node timelines at first submit; capacity
+    added later by the autoscaler has no fault timeline (documented), so
+    its jobs never restart from failures on the new node."""
+    spec = make_cluster("slurm-testbed")
+    eng = SchedulerEngine(spec, PolicyPrioritizer(make_policy("fcfs")),
+                          allocator="pack",
+                          fault_model=_model(mtbf_per_node=1800.0,
+                                             repair_time=300.0))
+    eng.submit([mk_job(0, gpus=1, runtime=10.0)])
+    eng.drain()
+    n0 = len(spec.nodes)
+    assert max(n for (_, _, n) in eng._injector.events or [(0, "", n0 - 1)]) \
+        < n0
+    from repro.core.types import NodeSpec
+    nid = eng.cluster.add_node(NodeSpec(0, "P100", 4, 32, 256.0, 1.0))
+    assert nid == n0
+    assert all(n < n0 for (_, _, n) in eng._injector.events)

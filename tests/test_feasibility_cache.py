@@ -195,3 +195,50 @@ def test_oversubscription_raises_under_dash_O():
     with pytest.raises(RuntimeError):            # double release guarded too
         c.release(j, {0: 1})
     np.testing.assert_array_equal(c.free_gpus, free0)
+
+
+def test_add_remove_node_invalidate_placement_caches():
+    """Elastic-capacity mutations must invalidate find_placement /
+    candidate_ways / eligibility exactly like fail/recover: a stale miss
+    would hide new capacity, a stale hit would place onto retired nodes."""
+    from repro.core.types import NodeSpec
+
+    c = cached()
+    big = mk_job(0, 16, gpu_type="A100")
+    assert not c.can_schedule_now(big)            # no such SKU yet
+    assert c.candidate_ways(big) == []
+    v0, tv0 = c.version, c.topo_version
+    nid = c.add_node(NodeSpec(0, "A100", 16, 128, 1024.0, 2.0))
+    assert c.version > v0 and c.topo_version > tv0
+    assert c.can_schedule_now(big)                # stale False would be a bug
+    assert c.candidate_ways(big) == [{nid: 16}]
+    assert c.eligible_mask("A100")[nid]
+
+    v1, tv1 = c.version, c.topo_version
+    assert c.remove_node(nid) is True             # idle -> immediate retire
+    assert c.version > v1 and c.topo_version > tv1
+    assert not c.can_schedule_now(big)            # stale True would be a bug
+    assert c.candidate_ways(big) == []
+    assert not c.eligible_mask("A100")[nid]
+
+
+def test_cordon_drain_invalidates_mid_version():
+    """remove_node on a busy node (cordon) and the auto-retire on release
+    both bump the version: placements cached before either step must not
+    survive it."""
+    c = cached()
+    j = mk_job(0, 4, gpu_type="V100")
+    pl = c.find_placement(j, "pack")
+    (node, _), = pl.items()
+    c.allocate(j, pl)
+    probe = mk_job(1, 2, gpu_type="V100")
+    assert c.can_schedule_now(probe)
+    c.remove_node(node)                           # cordons
+    pl2 = c.find_placement(probe, "pack")
+    assert pl2 is None or node not in pl2         # no stale placement on it
+    v = c.version
+    c.release(j, pl)                              # drain completes -> retire
+    assert c.version > v
+    assert bool(c.retired[node])
+    pl3 = c.find_placement(probe, "pack")
+    assert pl3 is None or node not in pl3

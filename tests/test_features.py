@@ -1,4 +1,5 @@
 import numpy as np
+import pytest
 from conftest import hypothesis_or_stubs
 
 given, settings, st = hypothesis_or_stubs()
@@ -62,3 +63,117 @@ def test_features_bounded(now, use_est):
     feats = build_features(jobs, c, now, use_estimates=use_est)
     assert np.isfinite(feats).all()
     assert (feats >= -1.0 - 1e-6).all() and (feats <= 2.0 + 1e-6).all()
+
+
+# ------------------------------------------- vectorized FBM differential ----
+# The RL path's per-decision feature matrix was an O(window * 17) Python
+# loop; the vectorized path over the engine's WindowFields views must be
+# bit-identical (same float32 matrix, bit for bit) so RL schedules and
+# training trajectories cannot drift.
+
+from repro.core.features import _build_features_scalar  # noqa: E402
+from repro.core.prioritizer import WindowFields  # noqa: E402
+
+
+def _varied_cluster(trace, seed):
+    c = ClusterState(make_cluster(trace), cache=True)
+    jobs = generate_trace(trace, 12, seed=seed)
+    for j in jobs:
+        pl = c.find_placement(j, "pack")
+        if pl is not None:
+            c.allocate(j, pl)
+    return c
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["helios", "philly", "alibaba"]),
+       st.integers(min_value=0, max_value=10_000),
+       st.booleans())
+def test_vectorized_features_bit_identical(trace, seed, use_est):
+    jobs = generate_trace(trace, 64, seed=seed % 997)
+    c = _varied_cluster(trace, seed % 31)
+    now = jobs[len(jobs) // 2].submit_time + float(seed % 7919)
+    ref = _build_features_scalar(jobs, c, now, use_estimates=use_est)
+    vec = build_features(jobs, c, now, use_estimates=use_est,
+                         fields=WindowFields.from_jobs(jobs))
+    assert vec.dtype == ref.dtype
+    assert np.array_equal(ref, vec)
+
+
+def test_vectorized_features_empty_and_downed_nodes():
+    c = ClusterState(make_cluster("helios"), cache=True)
+    c.fail_node(0)
+    assert np.array_equal(
+        build_features([], c, 0.0, fields=WindowFields.from_jobs([])),
+        _build_features_scalar([], c, 0.0))
+    jobs = generate_trace("helios", 8, seed=3)
+    assert np.array_equal(
+        build_features(jobs, c, 1e5, fields=WindowFields.from_jobs(jobs)),
+        _build_features_scalar(jobs, c, 1e5))
+
+
+def test_build_state_fields_path_identical(helios_jobs, helios_cluster):
+    c = ClusterState(helios_cluster)
+    jobs = helios_jobs[:48]
+    fields = WindowFields.from_jobs(jobs)
+    for raw in (False, True):
+        ov_a, cv_a, m_a = build_state(jobs, c, 1e5, raw=raw)
+        ov_b, cv_b, m_b = build_state(jobs, c, 1e5, raw=raw, fields=fields)
+        assert np.array_equal(ov_a, ov_b)
+        assert np.array_equal(cv_a, cv_b)
+        assert np.array_equal(m_a, m_b)
+
+
+def test_rl_prioritizer_rank_window_matches_rank():
+    """The engine hands RLPrioritizer.rank_window its field views; the
+    returned permutation (and hence the schedule) must equal rank()'s."""
+    from repro.core.agent import PPOAgent, PPOConfig
+    from repro.core.env import RLPrioritizer
+
+    jobs = generate_trace("helios", 40, seed=9)
+    c = ClusterState(make_cluster("helios"), cache=True)
+    fields = WindowFields.from_jobs(jobs)
+    pri = RLPrioritizer(PPOAgent(PPOConfig(seed=3)), explore=False)
+    a = pri.rank(jobs, c, 1e4)
+    b = pri.rank_window(jobs, c, 1e4, fields)
+    assert a == b
+
+
+def test_rl_stream_rank_window_schedule_identical():
+    """Stream-level differential: an engine using the rank_window fast path
+    (fields from its pending index) schedules bit-identically to one forced
+    onto the rank() fallback."""
+    from repro.core.agent import PPOAgent, PPOConfig
+    from repro.core.env import RLPrioritizer
+    from repro.sched import SchedulerEngine, get_scenario
+
+    run = get_scenario("flash-crowd").build(64, seed=6)
+    fins = []
+    for strip_rank_window in (False, True):
+        pri = RLPrioritizer(PPOAgent(PPOConfig(seed=11)), explore=False)
+        eng = SchedulerEngine(run.spec, pri, allocator="pack")
+        if strip_rank_window:
+            eng._rank_window = None     # force the rank() fallback
+        eng.submit([j.clone_pending() for j in run.jobs])
+        eng.drain()
+        fins.append({j.job_id: (j.start_time, j.finish_time)
+                     for j in eng.completed})
+        assert len(fins[-1]) == 64
+    assert fins[0] == fins[1]
+
+
+@pytest.mark.parametrize("trace,seed,use_est", [
+    ("helios", 0, False), ("helios", 13, True),
+    ("philly", 4, False), ("philly", 7, True),
+    ("alibaba", 2, False), ("alibaba", 29, True),
+])
+def test_vectorized_features_bit_identical_fixed(trace, seed, use_est):
+    """Deterministic cover for the differential (the hypothesis variant is
+    skipped on minimal installs without the [test] extra)."""
+    jobs = generate_trace(trace, 96, seed=seed)
+    c = _varied_cluster(trace, seed)
+    now = jobs[48].submit_time + 123.0
+    ref = _build_features_scalar(jobs, c, now, use_estimates=use_est)
+    vec = build_features(jobs, c, now, use_estimates=use_est,
+                         fields=WindowFields.from_jobs(jobs))
+    assert np.array_equal(ref, vec)

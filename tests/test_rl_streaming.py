@@ -200,6 +200,7 @@ def test_cutter_carry_survives_decisionless_tail():
         class cluster:
             total_gpus = np.array([8])
             free_gpus = np.array([8])
+            retired = np.zeros(1, dtype=bool)
 
     eng = _Eng()
     cutter.telemetry.on_tick(0.0, eng)

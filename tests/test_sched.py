@@ -315,3 +315,48 @@ def test_fault_storm_restarts():
     assert len(sr.batch.jobs) == 32
     assert sr.batch.restarts > 0
     assert sr.telemetry.samples[-1].requeues >= 0
+
+
+# ------------------------------------------------------------ trace replay ----
+
+
+def test_trace_replay_tiles_and_is_deterministic():
+    """trace-replay adapts CSV rows through repro.core.trace: truncation
+    below the fixture size, tiling above it (copies time-shifted past the
+    span), sequential re-ids, and seed-independence (a replay has no RNG)."""
+    from repro.sched.scenarios import replay_trace_jobs, _DEFAULT_TRACE_CSV
+
+    base = get_scenario("trace-replay").build(12, seed=0)
+    again = get_scenario("trace-replay").build(12, seed=99)
+    assert [j.submit_time for j in base.jobs] == \
+        [j.submit_time for j in again.jobs]       # seed is ignored
+    assert [j.job_id for j in base.jobs] == list(range(12))
+
+    tiled = replay_trace_jobs(_DEFAULT_TRACE_CSV, 100)
+    assert len(tiled) == 100
+    ts = [j.submit_time for j in tiled]
+    assert ts == sorted(ts)
+    # the second copy repeats the first, shifted by one period
+    assert tiled[48].runtime == tiled[0].runtime
+    assert tiled[48].submit_time > tiled[47].submit_time
+
+
+def test_trace_replay_env_override(tmp_path, monkeypatch):
+    """REPRO_TRACE_CSV points the registered scenario at an external trace
+    (the tests/ fixture here) without touching the registry."""
+    import os
+    from repro.sched.scenarios import TRACE_CSV_ENV
+
+    fixture = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "data", "trace_replay.csv")
+    monkeypatch.setenv(TRACE_CSV_ENV, fixture)
+    run = get_scenario("trace-replay").build(24, seed=0)
+    assert len(run.jobs) == 24
+    assert all(j.gpu_type in ("P100", "any") for j in run.jobs)  # philly-ish
+    sr = run_scenario(run, allocator="pack", rescan_interval=300.0)
+    assert len(sr.batch.jobs) == 24
+    assert all(j.state == JobState.COMPLETED for j in sr.batch.jobs)
+
+    monkeypatch.setenv(TRACE_CSV_ENV, str(tmp_path / "missing.csv"))
+    with pytest.raises(FileNotFoundError):
+        get_scenario("trace-replay").build(8, seed=0)

@@ -18,6 +18,7 @@ class _FakeCluster:
     def __init__(self, total=(8, 8), free=(8, 8)):
         self.total_gpus = np.array(total, dtype=np.int64)
         self.free_gpus = np.array(free, dtype=np.int64)
+        self.retired = np.zeros(len(total), dtype=bool)
 
 
 class _FakeEngine:

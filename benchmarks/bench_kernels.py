@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
 def _time(fn, n=5) -> float:

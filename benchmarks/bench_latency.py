@@ -6,7 +6,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row
 from repro.core import (ClusterState, Job, choose_allocation, generate_trace,

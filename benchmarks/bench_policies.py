@@ -9,7 +9,6 @@ import numpy as np
 from benchmarks.common import (BATCH_SIZE, EVAL_BATCHES, eval_pair,
                                get_trainer, row)
 from repro.core import PolicyPrioritizer, Simulator, make_policy
-from repro.core.trainer import TrainerConfig, RLTuneTrainer
 
 TRACES = ("philly", "helios", "alibaba")
 

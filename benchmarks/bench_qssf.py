@@ -2,10 +2,8 @@
 all four metrics, plus a long-horizon consecutive-jobs JCT comparison."""
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.common import (BATCH_SIZE, EVAL_BATCHES, SCALE, eval_pair,
-                               get_trainer, row)
+from benchmarks.common import SCALE, eval_pair, get_trainer, row
 from repro.core import (PolicyPrioritizer, Simulator, improvement,
                         make_policy)
 

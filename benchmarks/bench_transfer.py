@@ -2,8 +2,6 @@
 one base policy, evaluate its ranking under every other base policy."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import BATCH_SIZE, EVAL_BATCHES, get_trainer, row
 from repro.core import improvement
 from repro.core.trainer import RLTuneTrainer, TrainerConfig
@@ -15,7 +13,8 @@ def run(out: list[str]) -> None:
     print("# Table 7: wait-time improvement, cross-policy transfer (helios)")
     agents = {p: get_trainer("helios", p, "wait").agent.state_dict()
               for p in POLICIES}
-    print(f"{'train\\test':12s} " + "".join(f"{p:>9s}" for p in POLICIES))
+    hdr = "train\\test"
+    print(f"{hdr:12s} " + "".join(f"{p:>9s}" for p in POLICIES))
     for src in POLICIES:
         cells = []
         for dst in POLICIES:

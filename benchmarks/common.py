@@ -4,7 +4,6 @@ from __future__ import annotations
 import os
 import time
 
-import numpy as np
 
 from repro.core import improvement
 from repro.core.trainer import RLTuneTrainer, TrainerConfig

@@ -112,8 +112,8 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig | str) -> dict[str, Any]:
     B, L = shape.global_batch, shape.seq_len
     i32 = jnp.int32
 
-    def tok(b: int, l: int) -> jax.ShapeDtypeStruct:
-        return jax.ShapeDtypeStruct((b, l), i32)
+    def tok(b: int, n: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((b, n), i32)
 
     out: dict[str, Any] = {}
     if shape.kind == "train":

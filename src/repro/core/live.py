@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
 from repro.core.agent import PPOAgent
 from repro.core.cluster import ClusterState

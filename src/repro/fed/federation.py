@@ -44,7 +44,7 @@ from repro.core.prioritizer import PolicyPrioritizer, Prioritizer
 from repro.core.types import ClusterSpec, Job
 from repro.fed.router import ClusterInfo, ClusterView, Router, make_router
 from repro.fed.scenarios import FleetRun, get_fleet_scenario
-from repro.sched.engine import EngineSnapshot, SchedulerEngine
+from repro.sched.engine import SchedulerEngine
 from repro.sched.service import QuotaPrioritizer, wrap_tenancy
 from repro.sched.telemetry import RollingTelemetry, jain_index
 
@@ -125,6 +125,7 @@ class FederatedScheduler:
         router_seed: int = 0,
         optimized: bool = True,
         autoscalers: Sequence | None = None,
+        migration=None,
     ):
         if not clusters:
             raise ValueError("a federation needs at least one cluster")
@@ -173,6 +174,11 @@ class FederatedScheduler:
                        for info, eng in zip(self.infos, self.engines)]
         self.routed = [0] * len(self.engines)
         self.routes: dict[int, int] = {}        # job_id -> cluster index
+        #: cross-cluster migration policy (repro.lifecycle.migration duck
+        #: type: pick(fed, now) -> [MigrationEvent]); None = one-shot
+        #: routing only, bit-identical to the pre-lifecycle federation
+        self.migration = migration
+        self.migrations: list = []              # executed MigrationEvents
 
     # ------------------------------------------------------------- ingest ----
     def submit(self, jobs: Iterable[Job]) -> int:
@@ -234,7 +240,36 @@ class FederatedScheduler:
         if until != math.inf:
             self._control(until)
         self._refresh_views()
+        if self.migration is not None and until != math.inf:
+            if self._migrate(until):
+                self._refresh_views()
         return processed
+
+    def _migrate(self, now: float) -> int:
+        """Execute the migration policy's moves for this window edge:
+        drain from the source (``withdraw_pending`` → MIGRATING), resubmit
+        on the destination with preserved remaining work
+        (``admit_migrated``), and step the destination to the same edge so
+        the arrival is ingested — and possibly scheduled — at the instant
+        of the move.  Telemetry on both sides records the migration."""
+        moves = self.migration.pick(self, now)
+        for mv in moves:
+            job, remaining = self.engines[mv.src].withdraw_pending(mv.job_id)
+            dst = self.engines[mv.dst]
+            if now > dst.now:
+                dst.advance_to(now)       # arrivals land at the window edge
+            dst.admit_migrated(job, remaining)
+            dst.step(now)
+            self.routed[mv.src] -= 1
+            self.routed[mv.dst] += 1
+            self.routes[mv.job_id] = mv.dst
+            self.migrations.append(mv)
+            for idx, kind in ((mv.src, "out"), (mv.dst, "in")):
+                tel = self.telemetries[idx]
+                note = getattr(tel, "note_migration", None)
+                if note is not None:
+                    note(kind)
+        return len(moves)
 
     def _control(self, now: float, stalled: bool = False) -> int:
         """Run every attached autoscaler's control tick; returns the number
@@ -352,6 +387,7 @@ def run_fleet(
     router_seed: int = 0,
     optimized: bool = True,
     autoscaler_factory: Callable | None = None,
+    migration=None,
 ) -> FleetStreamResult:
     """Replay a fleet scenario (or a prebuilt ``FleetRun``) through a fresh
     federation in lockstep rescan windows: each window's arrivals are routed
@@ -363,7 +399,12 @@ def run_fleet(
     ``autoscaler_factory(i, spec)`` builds member ``i``'s ``repro.scale``
     controller (return ``None`` for fixed-capacity members); controllers
     tick at every lockstep window edge and routers see scaled capacity
-    through the refreshed views."""
+    through the refreshed views.
+
+    ``migration`` attaches a ``repro.lifecycle.migration`` policy: waiting
+    jobs re-route between members at every window edge when fresh snapshots
+    show a sufficiently better home (``migration=None`` keeps the one-shot
+    routing, bit-identical to the pre-lifecycle federation)."""
     if isinstance(run, str):
         run = get_fleet_scenario(run).build(num_jobs, seed)
     factory = prioritizer_factory or (
@@ -379,7 +420,7 @@ def run_fleet(
         fault_models=run.fault_models, queue_window=queue_window,
         telemetry_window=telemetry_window, sample_interval=sample_interval,
         router_seed=router_seed, optimized=optimized,
-        autoscalers=autoscalers)
+        autoscalers=autoscalers, migration=migration)
 
     jobs = sorted((j.clone_pending() for j in run.jobs),
                   key=lambda j: j.submit_time)

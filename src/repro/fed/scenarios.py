@@ -22,6 +22,11 @@ Registry: ``FLEET_SCENARIOS`` maps name -> ``FleetScenario``; use
 - ``fleet-multi-tenant`` — two clusters with skewed per-VC demand against
                            even quotas (exercises the per-engine VC-quota
                            gate across the fleet).
+- ``fleet-fault-migration`` — a *harsh* storm (2h MTBF, 30-minute repairs)
+                           on one member beside two healthy neighbours:
+                           the queue piles up behind the storm, the case
+                           ``repro.lifecycle`` cross-cluster migration
+                           exists to drain.
 """
 from __future__ import annotations
 
@@ -178,6 +183,23 @@ def _fleet_fault_storm(num_jobs: int, seed: int) -> FleetRun:
     return FleetRun(name="fleet-fault-storm", clusters=clusters,
                     jobs=merge_streams([r.jobs for r in runs]),
                     fault_models=(runs[0].fault_model, None, None))
+
+
+@register_fleet("fleet-fault-migration",
+                "A harsher fault storm on one member (2h MTBF, 30-minute "
+                "repairs, heavy stragglers) beside two healthy neighbours — "
+                "one-shot routing strands queued work behind the storm; "
+                "cross-cluster migration re-homes it.")
+def _fleet_fault_migration(num_jobs: int, seed: int) -> FleetRun:
+    runs = [get_scenario("fault-storm").build(n, seed + 23 * i)
+            for i, n in enumerate(_split(num_jobs, 3))]
+    clusters = tuple(_rename(runs[i].spec, f"philly-{i}") for i in range(3))
+    storm = FaultModel(mtbf_per_node=2 * 3600.0, repair_time=1800.0,
+                       straggler_prob=0.4, straggler_slowdown=0.4,
+                       ckpt_interval=900.0, seed=seed + 808)
+    return FleetRun(name="fleet-fault-migration", clusters=clusters,
+                    jobs=merge_streams([r.jobs for r in runs]),
+                    fault_models=(storm, None, None))
 
 
 @register_fleet("fleet-sku-split",

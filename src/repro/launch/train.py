@@ -12,12 +12,9 @@ Smoke mode (CPU, reduced config):
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as PS
 

@@ -65,9 +65,11 @@ from repro.core.cluster import ClusterState, Placement
 from repro.core.faults import FaultInjector, FaultModel
 from repro.core.metrics import BatchResult
 from repro.core.milp import choose_allocation
-from repro.core.prioritizer import (PolicyPrioritizer, Prioritizer,
-                                    WindowFields)
+from repro.core.prioritizer import (  # noqa: F401  (PolicyPrioritizer
+    PolicyPrioritizer,                # re-exported via repro.sched)
+    Prioritizer, WindowFields)
 from repro.core.types import ClusterSpec, Job, JobState
+from repro.lifecycle.machine import transition
 
 #: Pending-queue window handed to the prioritizer each decision (the seed
 #: hard-coded ``10 * 256``; now a configurable engine parameter).
@@ -144,6 +146,18 @@ class EngineHooks:
     def on_requeue(self, job: Job, now: float) -> None: ...
     def on_tick(self, now: float, engine: "SchedulerEngine") -> None: ...
 
+    def on_preempt(self, job: Job, now: float, penalty_s: float) -> None:
+        """A running job was checkpoint-evicted by the lifecycle layer
+        (preempt or elastic resize).  ``penalty_s`` is the resume penalty
+        charged, in work-seconds.  Fires *before* the matching
+        ``on_requeue``; fault kills do NOT fire this."""
+        ...
+
+    def on_resume(self, job: Job, now: float) -> None:
+        """A previously preempted/paused/migrated job restarted from its
+        checkpoint.  Fires right after the matching ``on_start``."""
+        ...
+
     def on_decision(self, jobs: list[Job], order: list[int], now: float,
                     engine: "SchedulerEngine") -> None:
         """One prioritizer decision: ``jobs`` is the ranking window handed
@@ -189,6 +203,9 @@ class EngineSnapshot:
     total_gpus: int = 0
     total_gpus_by_type: dict = dataclasses.field(default_factory=dict)
     cordoned: int = 0
+    preemptions: int = 0
+    paused: int = 0
+    resume_penalty_gpu_s: float = 0.0
 
     @property
     def in_flight(self) -> int:
@@ -258,6 +275,15 @@ class SchedulerEngine:
         self.milp_calls = 0
         self.backfills = 0
         self.restarts = 0
+        self.preemptions = 0
+        self.resume_penalty_gpu_s = 0.0
+        #: jobs checkpoint-suspended via pause_job: job_id -> Job (hold no
+        #: GPUs, sit outside the pending queue until resume / migration)
+        self.paused: dict[int, Job] = {}
+        #: job_ids whose next start is a checkpoint *resume* (preempted,
+        #: paused, or admitted mid-flight) — drives the on_resume hook;
+        #: fault-kill requeues intentionally never enter this set
+        self._resume_pending: set[int] = set()
         self.slow_nodes: dict[int, float] = {}
         self.now = 0.0
         self.t0: float | None = None
@@ -328,6 +354,8 @@ class SchedulerEngine:
             free_gpus_by_type=dict(free_by_type),
             total_gpus=prov, total_gpus_by_type=dict(prov_by_type),
             cordoned=int(self.cluster.cordoned.sum()),
+            preemptions=self.preemptions, paused=len(self.paused),
+            resume_penalty_gpu_s=self.resume_penalty_gpu_s,
         )
 
     # ------------------------------------------------------ pending queue ----
@@ -411,6 +439,22 @@ class SchedulerEngine:
             processed += self.step(self.next_event_time())
         return processed
 
+    def advance_to(self, at: float) -> None:
+        """Advance the clock to ``at`` *without* a scheduling pass — the
+        lifecycle controller's window-edge alignment.  ``step(until)`` only
+        moves the clock to the last processed event, so a controller acting
+        at the window edge would otherwise compute elapsed work against a
+        stale instant.  Unlike :meth:`reschedule` this runs no decision and
+        fires no hooks: a controller that then takes no action is
+        unobservable (pinned bit-identical, counters included)."""
+        if at > self.now:
+            if self._events and self._events[0][0] < at:
+                raise RuntimeError(
+                    f"advance_to t={at} would skip a queued event at "
+                    f"t={self._events[0][0]}; step() there first")
+            self.now = at
+            self._handle_faults()
+
     def reschedule(self, at: float | None = None) -> None:
         """Run one scheduling pass, outside any event instant.  Capacity
         mutations (autoscaler ``add_node`` / ``remove_node``) are not
@@ -459,14 +503,35 @@ class SchedulerEngine:
                  for i in placement)
         return max(float(sp), 1e-3)
 
+    def _job_speed(self, job: Job, placement: Placement) -> float:
+        """Node-derived speed, scaled by gang size for resized elastic jobs
+        (``runtime`` is defined at ``base_gpus``; work rate scales linearly
+        with the current gang).  The factor is exactly 1.0 — and the
+        resulting duration bit-identical to the pre-lifecycle engine —
+        whenever the job runs at its submitted size."""
+        speed = self._effective_speed(placement)
+        if job.base_gpus > 0 and job.num_gpus != job.base_gpus:
+            speed *= job.num_gpus / job.base_gpus
+        return speed
+
+    def _fire_hook(self, name: str, *args) -> None:
+        """``getattr``-guarded dispatch for hooks added after observers were
+        written (duck-typed, same contract as ``_fire_decision``)."""
+        for h in self.hooks:
+            fn = getattr(h, name, None)
+            if fn is not None:
+                fn(*args)
+
     def _start_job(self, job: Job, placement: Placement) -> None:
         self.cluster.allocate(job, placement)
-        speed = self._effective_speed(placement)
+        speed = self._job_speed(job, placement)
         dur = self.remaining[job.job_id] / speed
         finish = self.now + dur
         if job.start_time < 0:
             job.start_time = self.now
-        job.state = JobState.RUNNING
+        if job.first_start_time < 0:
+            job.first_start_time = self.now
+        transition(job, JobState.RUNNING)
         job.placement = placement
         self.running[job.job_id] = [job, placement, self.now, finish, speed]
         if self.optimized:
@@ -475,6 +540,9 @@ class SchedulerEngine:
                        (finish, next(self._seq), "finish", job.job_id))
         for h in self.hooks:
             h.on_start(job, self.now)
+        if job.job_id in self._resume_pending:
+            self._resume_pending.discard(job.job_id)
+            self._fire_hook("on_resume", job, self.now)
 
     def _est_rt(self, job: Job) -> float:
         rt = job.est_runtime if self.prioritizer.use_estimates else job.runtime
@@ -542,27 +610,203 @@ class SchedulerEngine:
                 return fin
         return float("inf")
 
-    def _kill_job(self, jid: int, preserve_ckpt: bool) -> None:
+    def _kill_job(self, jid: int, preserve_ckpt: bool, *,
+                  ckpt_interval: float | None = None,
+                  resume_penalty: float = 0.0,
+                  via: JobState | None = None,
+                  requeue: bool = True) -> Job:
+        """Evict a running job, floor its progress to the checkpoint grid,
+        and (by default) requeue it.
+
+        The fault path calls the original two-argument form and is
+        bit-identical to the pre-lifecycle engine: the ckpt floor applies
+        exactly when a fault injector is active, using
+        ``fault_model.ckpt_interval``.  Lifecycle callers (preempt / pause /
+        resize / migrate) pass an explicit ``ckpt_interval`` plus a
+        ``resume_penalty`` (work-seconds, from ``CkptCostModel``) and may
+        take over requeueing themselves: ``requeue=False`` leaves the job
+        in the ``via`` state for the caller to route onward."""
         job, placement, st, fin, speed = self.running.pop(jid)
         if self.optimized:
             self._finish_index_remove(fin, jid)
         self.cluster.release(job, placement)
         elapsed = max(0.0, self.now - st)
         work_done = elapsed * speed
-        if preserve_ckpt and self._injector is not None:
-            k = int(elapsed // self.fault_model.ckpt_interval)
-            work_done = min(k * self.fault_model.ckpt_interval * speed,
-                            work_done)
-        elif not preserve_ckpt:
+        if preserve_ckpt:
+            interval = ckpt_interval
+            if interval is None and self._injector is not None:
+                interval = self.fault_model.ckpt_interval
+            if interval is not None:
+                k = int(elapsed // interval)
+                work_done = min(k * interval * speed, work_done)
+        else:
             work_done = 0.0
-        self.remaining[jid] = max(self.remaining[jid] - work_done, 1.0)
-        job.state = JobState.PENDING
+        left = max(self.remaining[jid] - work_done, 1.0)
+        # checkpointed-progress snapshot *before* the resume penalty: the
+        # penalty is replayed restore work, not training progress
+        job.progress_at_ckpt = max(
+            0.0, 1.0 - min(left / max(job.runtime, 1e-9), 1.0))
+        if resume_penalty > 0.0:
+            left += resume_penalty
+            self.resume_penalty_gpu_s += resume_penalty * job.num_gpus
+        self.remaining[jid] = left
         job.placement = None
         job.restarts += 1
         self.restarts += 1
+        if via is not None:
+            transition(job, via)
+        if requeue:
+            if job.state is not JobState.PENDING:
+                transition(job, JobState.PENDING)
+            self._push_pending(job)
+            for h in self.hooks:
+                h.on_requeue(job, self.now)
+        return job
+
+    # ------------------------------------------------------ lifecycle ops ----
+    def preempt_job(self, jid: int, cost=None) -> Job:
+        """Checkpoint-evict a running job and requeue it (``RUNNING →
+        PREEMPTED → PENDING``).  ``cost`` is a ``CkptCostModel`` (or None
+        for penalty-free eviction on the fault-model ckpt grid): its
+        ``ckpt_interval`` floors surviving progress and its
+        ``resume_penalty`` is charged as extra remaining work.  Fires
+        ``on_preempt`` (while the job is observably PREEMPTED) then
+        ``on_requeue``."""
+        if jid not in self.running:
+            raise KeyError(f"job {jid} is not running")
+        job = self.running[jid][0]
+        interval = cost.ckpt_interval if cost is not None else None
+        penalty = cost.resume_penalty(job) if cost is not None else 0.0
+        job = self._kill_job(jid, preserve_ckpt=True, ckpt_interval=interval,
+                             resume_penalty=penalty,
+                             via=JobState.PREEMPTED, requeue=False)
+        self.preemptions += 1
+        self._resume_pending.add(jid)
+        self._fire_hook("on_preempt", job, self.now, penalty)
+        transition(job, JobState.PENDING)
         self._push_pending(job)
         for h in self.hooks:
             h.on_requeue(job, self.now)
+        return job
+
+    def pause_job(self, jid: int, cost=None) -> Job:
+        """Checkpoint-suspend a running job (``RUNNING → PAUSED``): releases
+        its GPUs and holds it *outside* the pending queue until
+        :meth:`resume_job` or a cross-cluster migration picks it up."""
+        if jid not in self.running:
+            raise KeyError(f"job {jid} is not running")
+        job = self.running[jid][0]
+        interval = cost.ckpt_interval if cost is not None else None
+        penalty = cost.resume_penalty(job) if cost is not None else 0.0
+        job = self._kill_job(jid, preserve_ckpt=True, ckpt_interval=interval,
+                             resume_penalty=penalty,
+                             via=JobState.PAUSED, requeue=False)
+        self.paused[jid] = job
+        return job
+
+    def resume_job(self, jid: int) -> Job:
+        """Requeue a paused job (``PAUSED → PENDING``); it restarts from
+        its checkpoint at the next scheduling pass."""
+        job = self.paused.pop(jid, None)
+        if job is None:
+            raise KeyError(f"job {jid} is not paused")
+        transition(job, JobState.PENDING)
+        self._resume_pending.add(jid)
+        self._push_pending(job)
+        for h in self.hooks:
+            h.on_requeue(job, self.now)
+        return job
+
+    @staticmethod
+    def _apply_gang(job: Job, gpus: int) -> None:
+        """Set an elastic job's gang size, re-deriving CPU/mem demand by
+        the same GPU-proportionate rule as ``Job.__post_init__``."""
+        job.num_gpus = gpus
+        job.req_cpus = max(1, 4 * gpus)
+        job.req_mem_gb = 32.0 * gpus
+
+    def resize_job(self, jid: int, new_gpus: int, cost=None) -> bool:
+        """Checkpoint-restart a running *elastic* job at a new gang size
+        (clamped to ``[min_gpus, max_gpus]``).  The job restarts
+        immediately when a placement at the new size exists; otherwise it
+        reverts to the old size (the GPUs it just freed guarantee
+        feasibility) and, failing even that, is requeued.  Returns True
+        iff the size actually changed."""
+        if jid not in self.running:
+            raise KeyError(f"job {jid} is not running")
+        job = self.running[jid][0]
+        if not job.elastic:
+            return False
+        new_gpus = max(job.min_gpus, min(job.max_gpus, int(new_gpus)))
+        old = job.num_gpus
+        if new_gpus == old:
+            return False
+        interval = cost.ckpt_interval if cost is not None else None
+        penalty = cost.resume_penalty(job) if cost is not None else 0.0
+        job = self._kill_job(jid, preserve_ckpt=True, ckpt_interval=interval,
+                             resume_penalty=penalty,
+                             via=JobState.PREEMPTED, requeue=False)
+        self.preemptions += 1
+        self._resume_pending.add(jid)
+        self._fire_hook("on_preempt", job, self.now, penalty)
+        self._apply_gang(job, new_gpus)
+        resized = True
+        pl = self._alloc_for(job, [])
+        if pl is None:
+            self._apply_gang(job, old)
+            resized = False
+            pl = self._alloc_for(job, [])
+        if pl is not None:
+            self._start_job(job, pl)     # PREEMPTED -> RUNNING
+        else:
+            transition(job, JobState.PENDING)
+            self._push_pending(job)
+            for h in self.hooks:
+                h.on_requeue(job, self.now)
+        return resized
+
+    def start_now(self, job: Job) -> bool:
+        """Place and start a *pending* job immediately, outside prioritizer
+        order (the deadline-lane fast path).  Returns False when no
+        placement exists at the current instant."""
+        pl = self._alloc_for(job, [])
+        if pl is None:
+            return False
+        self._remove_pending(job)
+        self._start_job(job, pl)
+        return True
+
+    def withdraw_pending(self, jid: int) -> tuple[Job, float]:
+        """Drain a queued or paused job for migration (``→ MIGRATING``);
+        returns ``(job, remaining_work)`` so the destination preserves
+        progress.  The job stops counting against this engine's
+        ``submitted`` the moment it leaves."""
+        job = self.paused.pop(jid, None)
+        if job is None:
+            job = next((j for j in self.pending if j.job_id == jid), None)
+            if job is None:
+                raise KeyError(f"job {jid} is neither pending nor paused")
+            self._remove_pending(job)
+        transition(job, JobState.MIGRATING)
+        self.submitted -= 1
+        self._resume_pending.discard(jid)
+        return job, self.remaining.pop(jid, job.runtime)
+
+    def admit_migrated(self, job: Job, remaining: float) -> None:
+        """Admit a job drained from another cluster (``MIGRATING →
+        PENDING``), preserving its remaining work.  The arrival event is
+        clamped to this engine's clock by ``submit``; callers should
+        ``step``/``reschedule`` afterwards to ingest it."""
+        transition(job, JobState.PENDING)
+        if self.t0 is None:
+            # first-ever job on this engine: anchor the stream at the
+            # current clock, not at the migrant's original submit_time —
+            # submit() must not drag the clock into the past
+            self.t0 = self.now
+        self.submit((job,))
+        self.remaining[job.job_id] = remaining
+        if remaining < job.runtime:
+            self._resume_pending.add(job.job_id)
 
     def _finish_job(self, jid: int) -> None:
         rec = self.running.pop(jid, None)
@@ -573,7 +817,7 @@ class SchedulerEngine:
             self._finish_index_remove(fin, jid)
         self.cluster.release(job, placement)
         job.finish_time = self.now
-        job.state = JobState.COMPLETED
+        transition(job, JobState.COMPLETED)
         self.gpu_seconds += job.num_gpus * (self.now - job.start_time)
         self.completed.append(job)
         self.prioritizer.observe_finish(job)
@@ -603,7 +847,7 @@ class SchedulerEngine:
             job, placement, st, fin, speed = rec
             if node not in placement:
                 continue
-            new_speed = self._effective_speed(placement)
+            new_speed = self._job_speed(job, placement)
             if self.straggler_migration and new_speed < 0.6 * speed:
                 # checkpoint + re-queue: the scheduler will replace it
                 self._kill_job(jid, preserve_ckpt=True)

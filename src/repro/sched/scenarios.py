@@ -24,6 +24,9 @@ Registry: ``SCENARIOS`` maps name -> ``Scenario``; use
                      (normalized ``repro.core.trace`` schema) replayed
                      through the engine; ``REPRO_TRACE_CSV`` points at an
                      external trace, defaulting to a packaged fixture.
+- ``slo-lanes``    — deadline storm: congestion spike plus a deadline-
+                     carrying job population and elastic gangs (the
+                     ``repro.lifecycle`` preemption-policy stress).
 """
 from __future__ import annotations
 
@@ -229,6 +232,38 @@ def _trace_replay(num_jobs: int, seed: int) -> ScenarioRun:
     path = os.environ.get(TRACE_CSV_ENV) or _DEFAULT_TRACE_CSV
     return ScenarioRun(name="trace-replay", spec=make_cluster("helios"),
                        jobs=replay_trace_jobs(path, num_jobs))
+
+
+@register("slo-lanes",
+          "Deadline storm under congestion: a 30-minute arrival spike, ~30% "
+          "of jobs carrying hard deadlines (1.5-3x their estimate), and ~25% "
+          "elastic gangs — the repro.lifecycle preemption stress.")
+def _slo_lanes(num_jobs: int, seed: int) -> ScenarioRun:
+    jobs = generate_trace("helios", num_jobs, seed=seed)
+    rng = np.random.default_rng(seed + 707)
+    if jobs:
+        # congestion: re-time a third of the stream into one dense spike so
+        # deadline jobs genuinely contend for GPUs
+        horizon = jobs[-1].submit_time
+        t_spike = 0.5 * horizon
+        crowd = rng.random(len(jobs)) < 0.35
+        for j, hit in zip(jobs, crowd):
+            if hit:
+                j.submit_time = t_spike + float(rng.uniform(0.0, 1800.0))
+        jobs.sort(key=lambda j: j.submit_time)
+    dl = rng.random(len(jobs)) < 0.30
+    factors = rng.uniform(1.5, 3.0, size=len(jobs))
+    el = rng.random(len(jobs)) < 0.25
+    for j, is_dl, f, is_el in zip(jobs, dl, factors, el):
+        if is_dl:
+            # deadline anchored on the *user-visible* estimate, like a real
+            # SLO contract; floored so sub-10-minute jobs get usable slack
+            j.deadline = j.submit_time + float(f) * max(j.est_runtime, 600.0)
+        elif is_el and j.num_gpus >= 2:
+            j.min_gpus = max(1, j.num_gpus // 2)
+            j.max_gpus = j.num_gpus * 2
+    return ScenarioRun(name="slo-lanes", spec=make_cluster("helios"),
+                       jobs=jobs)
 
 
 @register("sku-skew",

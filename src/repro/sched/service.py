@@ -194,6 +194,7 @@ def run_stream(
     optimized: bool = True,
     on_window: "Callable[[SchedulerEngine, float, int], None] | None" = None,
     autoscaler=None,
+    preemption=None,
 ) -> StreamResult:
     """Replay ``jobs`` through a fresh engine in rescan-interval windows.
 
@@ -213,6 +214,11 @@ def run_stream(
     heap (capacity, not ordering, is then the blocker; see
     ``Autoscaler.control``).  ``autoscaler=None`` leaves every engine code
     path bit-identical to the pre-autoscaling service (pinned by tests).
+
+    ``preemption`` (a ``repro.lifecycle.PreemptionController``) ticks once
+    per processed window, *after* the autoscaler — lifecycle moves act on
+    the post-scaling cluster.  ``preemption=None`` likewise touches no
+    engine code path (pinned bit-identical by tests).
     """
     if autoscaler is not None:
         # scale-ups append to spec.nodes: give the engine its own copy so a
@@ -277,6 +283,8 @@ def run_stream(
         windows += 1
         if autoscaler is not None:
             autoscaler.control(engine, t, telemetry)
+        if preemption is not None:
+            preemption.control(engine, t, telemetry)
         if on_window is not None:
             on_window(engine, t, windows)
     if telemetry is not None:
@@ -299,12 +307,14 @@ def run_scenario(
     sample_interval: float = 600.0,
     enforce_quotas: bool = True,
     autoscaler=None,
+    preemption=None,
 ) -> StreamResult:
     """Build a registered scenario and stream it through the engine with
     rolling telemetry.  The scenario's SLA population and VC quotas are
     honoured by wrapping the prioritizer with the matching lane/gate.
     ``autoscaler`` attaches a ``repro.scale`` controller to the service
-    loop (one control tick per processed rescan window)."""
+    loop (one control tick per processed rescan window); ``preemption``
+    attaches a ``repro.lifecycle`` controller ticking right after it."""
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
     run = scenario.build(num_jobs, seed) if isinstance(scenario, Scenario) \
@@ -319,4 +329,4 @@ def run_scenario(
         rescan_interval=rescan_interval, allocator=allocator,
         backfill=backfill, fault_model=run.fault_model,
         queue_window=queue_window, telemetry=telemetry, chunked_submit=True,
-        autoscaler=autoscaler)
+        autoscaler=autoscaler, preemption=preemption)

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import math
 
 import numpy as np
 
@@ -46,6 +45,7 @@ class TelemetrySample:
     running: int
     requeues: int                # fault-driven restarts in window
     vc_fairness: float           # Jain's index over per-VC GPU-seconds
+    preemptions: int = 0         # lifecycle preempt/resize evictions in window
 
 
 def jain_index(shares: list[float]) -> float:
@@ -84,6 +84,16 @@ class RollingTelemetry:
         self.scale_events: list = []
         self._last_prov = 0.0        # provisioned GPUs at the last tick
         self._last_busy_gpus = 0.0   # busy GPUs at the last tick
+        # lifecycle accounting (repro.lifecycle): preempt/resume hook
+        # counters, resume-penalty GPU-time, controller events, and
+        # cross-cluster migration counts reported by the federation
+        self.preempt_count = 0
+        self.resume_count = 0
+        self.resume_penalty_gpu_s = 0.0
+        self.preemption_events: list = []
+        self.migrations_in = 0
+        self.migrations_out = 0
+        self._preempts: collections.deque[float] = collections.deque()
 
     # ------------------------------------------------------------ hook API ----
     def on_submit(self, job: Job, now: float) -> None: ...
@@ -97,6 +107,14 @@ class RollingTelemetry:
 
     def on_requeue(self, job: Job, now: float) -> None:
         self._requeues.append(now)
+
+    def on_preempt(self, job: Job, now: float, penalty_s: float) -> None:
+        self.preempt_count += 1
+        self.resume_penalty_gpu_s += penalty_s * job.num_gpus
+        self._preempts.append(now)
+
+    def on_resume(self, job: Job, now: float) -> None:
+        self.resume_count += 1
 
     def on_tick(self, now: float, engine) -> None:
         if self._last_t is None:
@@ -127,6 +145,8 @@ class RollingTelemetry:
             self._fin.popleft()
         while self._requeues and self._requeues[0] < lo:
             self._requeues.popleft()
+        while self._preempts and self._preempts[0] < lo:
+            self._preempts.popleft()
         while self._segments and self._segments[0][1] <= lo:
             self._segments.popleft()
 
@@ -163,6 +183,7 @@ class RollingTelemetry:
             queue_len=len(engine.pending), running=len(engine.running),
             requeues=len(self._requeues),
             vc_fairness=jain_index(list(by_vc.values())),
+            preemptions=len(self._preempts),
         )
 
     # ------------------------------------------------------------ summaries ----
@@ -183,6 +204,25 @@ class RollingTelemetry:
         """Record autoscaler actions (provisioning-cost accounting); the
         driver forwards each control tick's emitted ``ScaleEvent``s."""
         self.scale_events.extend(events)
+
+    def note_preemption_events(self, events) -> None:
+        """Record lifecycle-controller actions (``PreemptionEvent``s) the
+        preemption controller emitted this tick."""
+        self.preemption_events.extend(events)
+
+    def note_migration(self, kind: str) -> None:
+        """Record one cross-cluster migration touching this cluster
+        (``kind`` is ``"in"`` or ``"out"``; reported by the federation)."""
+        if kind == "in":
+            self.migrations_in += 1
+        else:
+            self.migrations_out += 1
+
+    @property
+    def resume_penalty_gpu_hours(self) -> float:
+        """GPU-time charged as checkpoint-restore resume penalties — the
+        overhead budget preemption spends to win deadline hits."""
+        return self.resume_penalty_gpu_s / 3600.0
 
     @property
     def provisioned_gpu_hours(self) -> float:

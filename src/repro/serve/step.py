@@ -5,7 +5,6 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
 
 from repro.models.lm import LM

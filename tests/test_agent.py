@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.agent import (PPOAgent, PPOConfig, actor_logits, greedy_step,
-                              init_params, policy_step, value)
+                              init_params, policy_step)
 from repro.core.features import CV_SIZE, MAX_QUEUE_SIZE, OV_SIZE
 
 

@@ -9,7 +9,6 @@ import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 from conftest import REPO, SRC
 
@@ -17,7 +16,7 @@ from repro.core import (ClusterState, PolicyPrioritizer, make_cluster,
                         make_policy)
 from repro.core.types import Job, NodeSpec
 from repro.fed import FederatedScheduler, FleetRun, run_fleet
-from repro.scale import (Autoscaler, PoolSpec, QueuePressureAutoscaler,
+from repro.scale import (PoolSpec, QueuePressureAutoscaler,
                          TargetUtilizationAutoscaler, list_autoscalers,
                          make_autoscaler, pools_from_spec)
 from repro.sched import (QuotaPrioritizer, SchedulerEngine, get_scenario,

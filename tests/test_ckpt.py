@@ -1,8 +1,12 @@
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.ckpt import checkpoint as ckpt_mod
 from repro.ckpt.checkpoint import latest_step
 
 
@@ -21,6 +25,32 @@ def test_roundtrip(tmp_path):
     np.testing.assert_allclose(np.asarray(restored["a"]["w"]),
                                np.asarray(t["a"]["w"]))
     assert restored["a"]["b"].dtype == jnp.bfloat16
+
+
+def test_roundtrip_zlib_fallback_codec(tmp_path, monkeypatch):
+    """A checkpoint written on a minimal install (no zstandard) must
+    round-trip through the stdlib zlib codec, and the manifest must say
+    so — a zstd reader is never required to restore it."""
+    monkeypatch.setattr(ckpt_mod, "_zstd", None)
+    monkeypatch.setattr(ckpt_mod, "_CODEC", "zlib")
+    t = _tree(1)
+    d = save_checkpoint(str(tmp_path), 9, t)
+    import msgpack
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        assert msgpack.unpackb(f.read())["codec"] == "zlib"
+    restored, step = load_checkpoint(str(tmp_path), t)
+    assert step == 9
+    np.testing.assert_allclose(np.asarray(restored["a"]["w"]),
+                               np.asarray(t["a"]["w"]))
+    assert restored["a"]["b"].dtype == jnp.bfloat16
+
+
+def test_codec_error_paths(monkeypatch):
+    with pytest.raises(ValueError, match="unknown checkpoint codec"):
+        ckpt_mod._decompress(b"x", "lz4")
+    monkeypatch.setattr(ckpt_mod, "_zstd", None)
+    with pytest.raises(RuntimeError, match="compress"):
+        ckpt_mod._decompress(b"x", "zstd")
 
 
 def test_atomicity_tmp_cleanup(tmp_path):
@@ -43,6 +73,21 @@ def test_manager_interval_retention(tmp_path):
     import os
     kept = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
     assert len(kept) <= 2
+
+
+def test_manager_gc_keeps_exactly_newest(tmp_path):
+    """Retention is exact: keep=3 leaves precisely the three newest step
+    directories, and restore reads the newest survivor."""
+    mgr = CheckpointManager(str(tmp_path), interval=1, keep=3)
+    t = _tree()
+    for step in range(1, 7):
+        mgr.maybe_save(step, t)
+    mgr.wait()
+    kept = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                  if d.startswith("step_") and not d.endswith(".tmp"))
+    assert kept == [4, 5, 6]
+    _, step = mgr.restore(t)
+    assert step == 6
 
 
 def test_manager_restore(tmp_path):

@@ -1,6 +1,5 @@
 """Dry-run integration: production-mesh lower+compile for representative
 cells (subprocess with 512 fake devices) + roofline parsing units."""
-import json
 import os
 
 import pytest

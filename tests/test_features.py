@@ -7,7 +7,7 @@ given, settings, st = hypothesis_or_stubs()
 from repro.core import ClusterState, make_cluster
 from repro.core.features import (CV_SIZE, MAX_QUEUE_SIZE, NUM_FEATURES,
                                  OV_SIZE, build_features, build_state,
-                                 critic_features, sample_features)
+                                 sample_features)
 from repro.core.trace import generate_trace
 
 

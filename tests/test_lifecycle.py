@@ -1,0 +1,496 @@
+"""Tests for repro.lifecycle + the engine/federation plumbing underneath it:
+the enforced job state machine, checkpoint-restore preemption (penalty
+accounting pinned against the ckpt-floor math), pause/resume, elastic
+resize, SLO-lane deadline eviction, cross-cluster migration, the
+preemption-off / migration-off bit-identity pins, and the fault-kill
+requeue path staying hook-for-hook unchanged."""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import pytest
+from conftest import REPO, SRC
+
+from repro.core import PolicyPrioritizer, make_cluster, make_policy
+from repro.core.types import ClusterSpec, Job, JobState, NodeSpec
+from repro.fed import run_fleet
+from repro.lifecycle import (LEGAL_TRANSITIONS, CkptCostModel,
+                             ElasticGangPolicy, IllegalTransition,
+                             PreemptionController, QueueImbalanceMigration,
+                             SloDeadlinePolicy, check, transition)
+from repro.sched import (EngineHooks, SchedulerEngine, get_scenario,
+                         list_scenarios, run_scenario)
+
+
+def mk_job(i, gpus=1, gpu_type="any", submit=0.0, runtime=1000.0, **kw):
+    return Job(job_id=i, user=0, submit_time=submit, runtime=runtime,
+               est_runtime=runtime, num_gpus=gpus, gpu_type=gpu_type, **kw)
+
+
+def one_node_engine(gpus=8, speed=1.0, hooks=()):
+    spec = ClusterSpec([NodeSpec(0, "P100", gpus, 4 * gpus * 4,
+                                 32.0 * gpus * 4, speed)], name="uni")
+    return SchedulerEngine(spec, PolicyPrioritizer(make_policy("fcfs")),
+                           allocator="pack", hooks=hooks)
+
+
+class Recorder(EngineHooks):
+    """Ordered log of every lifecycle-relevant hook firing."""
+
+    def __init__(self):
+        self.log = []
+
+    def on_start(self, job, now):
+        self.log.append(("start", job.job_id, now))
+
+    def on_requeue(self, job, now):
+        self.log.append(("requeue", job.job_id, now))
+
+    def on_preempt(self, job, now, penalty_s):
+        self.log.append(("preempt", job.job_id, now, penalty_s))
+
+    def on_resume(self, job, now):
+        self.log.append(("resume", job.job_id, now))
+
+    def of(self, kind):
+        return [e for e in self.log if e[0] == kind]
+
+
+# ------------------------------------------------------------ state machine ----
+
+
+def test_transition_map_is_exhaustively_enforced():
+    """Every (src, dst) pair either transitions or raises — no silent
+    assignment path survives outside the map."""
+    for src in JobState:
+        for dst in JobState:
+            j = mk_job(0)
+            j.state = src
+            if dst in LEGAL_TRANSITIONS[src]:
+                check(src, dst)
+                assert transition(j, dst) is j and j.state is dst
+            else:
+                with pytest.raises(IllegalTransition):
+                    check(src, dst)
+                with pytest.raises(IllegalTransition):
+                    transition(j, dst)
+                assert j.state is src               # unchanged on refusal
+
+
+def test_terminal_states_have_no_exits():
+    assert LEGAL_TRANSITIONS[JobState.COMPLETED] == frozenset()
+    assert LEGAL_TRANSITIONS[JobState.FAILED] == frozenset()
+    with pytest.raises(IllegalTransition, match="COMPLETED"):
+        check(JobState.COMPLETED, JobState.PENDING)
+
+
+def test_illegal_transition_message_lists_legal_targets():
+    with pytest.raises(IllegalTransition, match="RUNNING"):
+        check(JobState.PENDING, JobState.PAUSED)
+
+
+# ------------------------------------------------ wait_time / jct satellites ----
+
+
+def test_wait_time_and_jct_raise_informatively_before_start():
+    j = mk_job(3, submit=50.0)
+    with pytest.raises(RuntimeError, match="job 3 never started"):
+        _ = j.wait_time
+    with pytest.raises(RuntimeError, match="job 3 never finished"):
+        _ = j.jct
+    with pytest.raises(RuntimeError, match="never finished"):
+        j.bsld()
+
+
+def test_first_start_time_survives_preempt_restart():
+    eng = one_node_engine()
+    eng.submit([mk_job(0, gpus=8, runtime=10_000.0)])
+    eng.step(0.0)
+    eng.step(500.0)
+    eng.preempt_job(0)
+    job = eng.pending[0]
+    assert job.first_start_time == 0.0
+    eng.reschedule(at=500.0)                       # immediate restart
+    assert job.start_time == 0.0 and job.first_start_time == 0.0
+    assert job.wait_time == 0.0                    # not reset by the requeue
+    eng.drain()
+    assert job.state is JobState.COMPLETED
+
+
+# ----------------------------------------------- preempt / resume + penalty ----
+
+
+def test_preempt_resume_penalty_matches_ckpt_floor_math():
+    """The acceptance pin: surviving progress floors to the ckpt grid,
+    ``progress_at_ckpt`` reflects the floored work *before* the resume
+    penalty, and the penalty lands in both remaining work and the
+    GPU-second overhead counter."""
+    rec = Recorder()
+    eng = one_node_engine(hooks=(rec,))
+    cost = CkptCostModel(ckpt_interval=1800.0, restore_s=120.0,
+                         per_gpu_restore_s=2.0)
+    eng.submit([mk_job(0, gpus=4, runtime=10_000.0)])
+    eng.step(0.0)
+    eng.advance_to(5000.0)
+    eng.preempt_job(0, cost)
+
+    # elapsed 5000s at speed 1.0 -> 2 whole 1800s intervals survive
+    floored = 2 * 1800.0 * 1.0
+    left = 10_000.0 - floored
+    penalty = 120.0 + 2.0 * 4
+    job = eng.pending[0]
+    assert job.state is JobState.PENDING and job.restarts == 1
+    assert job.progress_at_ckpt == pytest.approx(floored / 10_000.0)
+    assert eng.remaining[0] == pytest.approx(left + penalty)
+    assert eng.resume_penalty_gpu_s == pytest.approx(penalty * 4)
+    assert eng.preemptions == 1
+    assert eng.snapshot().preemptions == 1
+    # hook order: preempt (with the charged penalty) before requeue
+    assert rec.log[-2:] == [("preempt", 0, 5000.0, penalty),
+                            ("requeue", 0, 5000.0)]
+
+    eng.reschedule(at=5000.0)
+    assert rec.log[-2:] == [("start", 0, 5000.0), ("resume", 0, 5000.0)]
+    eng.drain()
+    assert job.finish_time == pytest.approx(5000.0 + left + penalty)
+
+
+def test_preempt_without_cost_model_is_penalty_free():
+    eng = one_node_engine()
+    eng.submit([mk_job(0, gpus=2, runtime=4000.0)])
+    eng.step(0.0)
+    eng.advance_to(1000.0)
+    eng.preempt_job(0)                             # no injector: no floor
+    assert eng.remaining[0] == pytest.approx(3000.0)
+    assert eng.resume_penalty_gpu_s == 0.0
+    with pytest.raises(KeyError, match="not running"):
+        eng.preempt_job(0)                         # already evicted
+
+
+def test_pause_holds_job_outside_queue_until_resume():
+    rec = Recorder()
+    eng = one_node_engine(hooks=(rec,))
+    eng.submit([mk_job(0, gpus=8, runtime=6000.0)])
+    eng.step(0.0)
+    eng.advance_to(1000.0)
+    eng.pause_job(0)
+    job = eng.paused[0]
+    assert job.state is JobState.PAUSED
+    assert eng.snapshot().paused == 1 and not eng.pending
+    assert not rec.of("preempt")                   # pause is not a preemption
+    eng.reschedule(at=2000.0)
+    assert not eng.running                         # paused work is invisible
+    eng.resume_job(0)
+    eng.reschedule(at=2000.0)
+    assert rec.of("resume") == [("resume", 0, 2000.0)]
+    eng.drain()
+    assert job.state is JobState.COMPLETED
+    assert job.finish_time == pytest.approx(2000.0 + 5000.0)
+    with pytest.raises(KeyError, match="not paused"):
+        eng.resume_job(0)
+
+
+# ------------------------------------------------------------ elastic resize ----
+
+
+def test_resize_scales_speed_with_gang_size():
+    rec = Recorder()
+    eng = one_node_engine(hooks=(rec,))
+    eng.submit([mk_job(0, gpus=4, runtime=8000.0, min_gpus=2, max_gpus=8)])
+    eng.step(0.0)
+    eng.advance_to(2000.0)
+    assert eng.resize_job(0, 2) is True
+    job, _, st, fin, speed = eng.running[0]
+    assert job.num_gpus == 2 and job.base_gpus == 4
+    assert job.req_cpus == 8 and job.req_mem_gb == 64.0
+    assert speed == pytest.approx(0.5)             # half the gang, half rate
+    assert st == 2000.0 and fin == pytest.approx(2000.0 + 6000.0 / 0.5)
+    assert rec.of("preempt") and rec.of("resume")  # resize is ckpt-restart
+    assert eng.preemptions == 1
+    eng.drain()
+    assert job.finish_time == pytest.approx(14_000.0)
+
+
+def test_resize_reverts_when_target_size_cannot_fit():
+    eng = one_node_engine(gpus=8)
+    eng.submit([mk_job(0, gpus=4, runtime=9000.0, min_gpus=2, max_gpus=8),
+                mk_job(1, gpus=4, runtime=9000.0)])
+    eng.step(0.0)
+    assert len(eng.running) == 2
+    assert eng.resize_job(0, 8) is False           # only 4 GPUs reachable
+    job = eng.running[0][0]
+    assert job.num_gpus == 4 and job.state is JobState.RUNNING
+    eng.drain()
+    assert all(j.state is JobState.COMPLETED
+               for j in (job, eng.running.get(1, [None])[0]) if j)
+
+
+def test_resize_refuses_non_elastic_and_noop_targets():
+    eng = one_node_engine()
+    eng.submit([mk_job(0, gpus=4, runtime=5000.0)])
+    eng.step(0.0)
+    assert eng.resize_job(0, 8) is False           # not elastic: untouched
+    assert eng.running[0][0].num_gpus == 4 and eng.preemptions == 0
+    eng2 = one_node_engine()
+    eng2.submit([mk_job(0, gpus=4, runtime=5000.0, min_gpus=4, max_gpus=8)])
+    eng2.step(0.0)
+    assert eng2.resize_job(0, 2) is False          # clamps to min == current
+    assert eng2.preemptions == 0
+
+
+# ------------------------------------------------------ SLO deadline policy ----
+
+
+def test_slo_policy_evicts_best_effort_for_deadline_job():
+    eng = one_node_engine()
+    eng.submit([mk_job(0, gpus=8, runtime=50_000.0),
+                mk_job(1, gpus=8, runtime=1000.0, submit=100.0,
+                       deadline=2000.0)])
+    eng.step(600.0)
+    assert 0 in eng.running and eng.pending        # 1 starved behind 0
+    ctl = PreemptionController([SloDeadlinePolicy()])
+    ctl.control(eng, 600.0)
+    kinds = [e.action for e in ctl.events]
+    assert kinds == ["preempt", "deadline-start"]
+    assert ctl.events[0].job_id == 0 and ctl.events[1].job_id == 1
+    assert ctl.events[0].penalty_s > 0.0           # charged, not free
+    assert 1 in eng.running                        # deadline job on GPUs now
+    assert eng.running[1][0].state is JobState.RUNNING
+    eng.drain()
+    jobs = {j.job_id: j for j in eng.completed}
+    assert jobs[1].finish_time <= 2000.0           # deadline made
+    assert jobs[0].restarts == 1
+    assert ctl.event_counts() == {"preempt": 1, "deadline-start": 1}
+
+
+def test_slo_policy_starts_second_urgent_job_on_freed_capacity():
+    """One eviction frees more than the first deadline job needs: the
+    second urgent job takes the free-capacity fast path (no extra
+    victim), and the controller advances the clock to the window edge."""
+    eng = one_node_engine()
+    eng.submit([mk_job(0, gpus=8, runtime=50_000.0),
+                mk_job(1, gpus=4, runtime=1000.0, submit=50.0,
+                       deadline=2000.0),
+                mk_job(2, gpus=4, runtime=1000.0, submit=60.0,
+                       deadline=2100.0)])
+    eng.step(600.0)
+    ctl = PreemptionController([SloDeadlinePolicy()])
+    ctl.control(eng, 600.0)
+    assert eng.now == 600.0
+    assert [e.action for e in ctl.events] == \
+        ["preempt", "deadline-start", "deadline-start"]
+    assert "free capacity" in ctl.events[2].reason
+    assert eng.preemptions == 1 and {1, 2} <= set(eng.running)
+
+
+def test_elastic_policy_shrinks_under_backlog_and_grows_when_idle():
+    eng = one_node_engine(gpus=8)
+    eng.submit([mk_job(0, gpus=8, runtime=40_000.0, min_gpus=2, max_gpus=8),
+                mk_job(1, gpus=4, runtime=1000.0, submit=10.0)])
+    eng.step(60.0)
+    pol = ElasticGangPolicy()
+    ev = pol.tick(eng, 60.0, CkptCostModel())
+    assert [e.action for e in ev] == ["shrink"]
+    assert eng.running[0][0].num_gpus == 4         # 8 -> max(2, 8//2)
+    eng.reschedule(at=60.0)
+    assert 1 in eng.running                        # backlog admitted
+    eng.step(20_000.0)                             # small job long gone
+    ev2 = pol.tick(eng, 20_000.0, CkptCostModel())
+    assert [e.action for e in ev2] == ["grow"]
+    assert eng.running[0][0].num_gpus == 8
+    eng.drain()
+    assert eng.done
+
+
+# ----------------------------------------------------------------- migration ----
+
+
+def test_withdraw_admit_preserves_progress_across_clusters():
+    rec = Recorder()
+    src = one_node_engine()
+    dst = one_node_engine(hooks=(rec,))
+    src.submit([mk_job(0, gpus=4, runtime=10_000.0)])
+    src.step(0.0)
+    src.advance_to(2000.0)
+    src.pause_job(0)                               # 8000s of work left
+    job, remaining = src.withdraw_pending(0)
+    assert job.state is JobState.MIGRATING
+    assert remaining == pytest.approx(8000.0)
+    assert src.submitted == 0 and 0 not in src.remaining
+
+    dst.advance_to(2000.0)                         # fleet clocks in lockstep
+    dst.admit_migrated(job, remaining)
+    assert job.state is JobState.PENDING
+    dst.step(2000.0)
+    assert 0 in dst.running
+    assert rec.of("resume")                        # restored, not fresh
+    dst.drain()
+    assert job.state is JobState.COMPLETED
+    assert job.finish_time == pytest.approx(2000.0 + 8000.0)
+
+
+def test_withdraw_pending_takes_queued_jobs_too():
+    eng = one_node_engine()
+    eng.submit([mk_job(0, gpus=8, runtime=9000.0),
+                mk_job(1, gpus=8, runtime=9000.0)])
+    eng.step(0.0)
+    job, remaining = eng.withdraw_pending(1)       # still queued, never ran
+    assert job.state is JobState.MIGRATING
+    assert remaining == pytest.approx(9000.0)
+    assert not eng.pending
+    with pytest.raises(KeyError, match="neither pending nor paused"):
+        eng.withdraw_pending(1)
+
+
+def test_fleet_migration_drains_queue_behind_fault_storm():
+    mig = QueueImbalanceMigration(min_advantage=2, max_moves_per_window=8)
+    sr = run_fleet("fleet-fault-migration", 90, seed=1, router="jsq",
+                   allocator="pack", rescan_interval=300.0, migration=mig)
+    assert len(sr.result.jobs) == 90               # nothing lost in transit
+    assert sr.fed.migrations                       # the storm forced moves
+    for mv in sr.fed.migrations:
+        assert mv.src != mv.dst
+    # routing tables track the final home of each migrated job
+    last = {}
+    for mv in sr.fed.migrations:
+        last[mv.job_id] = mv.dst
+    for jid, dst in last.items():
+        assert sr.fed.routes[jid] == dst
+    # telemetry on both sides saw every move
+    tin = sum(t.migrations_in for t in sr.telemetries)
+    tout = sum(t.migrations_out for t in sr.telemetries)
+    assert tin == tout == len(sr.fed.migrations)
+
+
+def test_migration_off_fleet_bit_identical():
+    """A migration policy that can never clear its hysteresis threshold
+    must be unobservable — same pin idiom as the frozen autoscaler."""
+    base = run_fleet("fleet-fault-storm", 48, seed=5, router="jsq",
+                     allocator="pack", rescan_interval=300.0)
+    inert = run_fleet("fleet-fault-storm", 48, seed=5, router="jsq",
+                      allocator="pack", rescan_interval=300.0,
+                      migration=QueueImbalanceMigration(
+                          min_advantage=10 ** 9))
+    a = {j.job_id: (j.start_time, j.finish_time, j.restarts)
+         for j in base.result.jobs}
+    b = {j.job_id: (j.start_time, j.finish_time, j.restarts)
+         for j in inert.result.jobs}
+    assert a == b
+    assert not inert.fed.migrations
+
+
+# ---------------------------------------------- disabled == bit-identical ----
+
+
+@pytest.mark.parametrize("name", sorted(list_scenarios()))
+def test_disabled_preemption_bit_identical(name):
+    """Acceptance pin: an attached controller with no policies (and the
+    ``preemption=...`` service plumbing) must be bit-identical to
+    ``preemption=None`` on every registered scenario."""
+    base = run_scenario(get_scenario(name).build(64, seed=5),
+                        allocator="pack", rescan_interval=300.0)
+    inert = run_scenario(get_scenario(name).build(64, seed=5),
+                         allocator="pack", rescan_interval=300.0,
+                         preemption=PreemptionController(policies=[]))
+    a = {j.job_id: (j.start_time, j.finish_time, j.restarts)
+         for j in base.batch.jobs}
+    b = {j.job_id: (j.start_time, j.finish_time, j.restarts)
+         for j in inert.batch.jobs}
+    assert a == b
+    assert base.batch.decisions == inert.batch.decisions
+    assert base.batch.backfills == inert.batch.backfills
+
+
+def test_fault_kill_requeue_path_unchanged():
+    """Fault evictions ride the same _kill_job core but must stay exactly
+    what they were: on_requeue fires, on_preempt does NOT, and the
+    preemption counters stay untouched."""
+    run = get_scenario("fault-storm").build(48, seed=3)
+    rec = Recorder()
+    eng = SchedulerEngine(run.spec, PolicyPrioritizer(make_policy("fcfs")),
+                          allocator="pack", fault_model=run.fault_model,
+                          hooks=(rec,))
+    eng.submit([j.clone_pending() for j in run.jobs])
+    eng.drain()
+    assert len(eng.completed) == 48
+    assert rec.of("requeue")                       # the storm did evict
+    assert not rec.of("preempt") and not rec.of("resume")
+    assert eng.preemptions == 0
+    assert eng.resume_penalty_gpu_s == 0.0
+
+
+# ------------------------------------------------------- stream integration ----
+
+
+def test_slo_lanes_stream_with_full_controller():
+    """slo-lanes end-to-end through run_scenario: the controller acts, all
+    jobs still complete, and the engine/telemetry preemption counters
+    agree with each other."""
+    off = run_scenario("slo-lanes", num_jobs=120, seed=0, allocator="pack",
+                       rescan_interval=60.0)
+    ctl = PreemptionController([SloDeadlinePolicy(), ElasticGangPolicy()])
+    on = run_scenario("slo-lanes", num_jobs=120, seed=0, allocator="pack",
+                      rescan_interval=60.0, preemption=ctl)
+    assert len(off.batch.jobs) == len(on.batch.jobs) == 120
+    assert ctl.events and on.engine.preemptions > 0
+    tel = on.telemetry
+    assert tel.preempt_count == on.engine.preemptions
+    assert tel.resume_count == tel.preempt_count   # every eviction resumed
+    assert tel.resume_penalty_gpu_s == \
+        pytest.approx(on.engine.resume_penalty_gpu_s)
+    assert tel.preemption_events == ctl.events
+
+    def hit_rate(jobs):
+        dl = [j for j in jobs if j.has_deadline]
+        return sum(1 for j in dl if j.finish_time <= j.deadline) / len(dl)
+
+    assert hit_rate(on.batch.jobs) >= hit_rate(off.batch.jobs)
+
+
+def test_slo_lanes_scenario_shape():
+    run = get_scenario("slo-lanes").build(100, 0)
+    dl = [j for j in run.jobs if j.has_deadline]
+    el = [j for j in run.jobs if j.elastic]
+    assert dl and el and len(dl) < 100
+    for j in dl:
+        assert j.deadline > j.submit_time
+    for j in el:
+        assert 0 < j.min_gpus < j.num_gpus * 2 + 1 and j.max_gpus > j.min_gpus
+    again = get_scenario("slo-lanes").build(100, 0)
+    assert [(j.deadline, j.min_gpus, j.max_gpus) for j in run.jobs] == \
+        [(j.deadline, j.min_gpus, j.max_gpus) for j in again.jobs]
+
+
+# ----------------------------------------------------------------- tooling ----
+
+
+def test_bench_preemption_smoke(tmp_path):
+    """The registered preemption bench must run end-to-end in --smoke mode
+    and emit a well-formed acceptance block."""
+    json_path = tmp_path / "BENCH_preemption.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_BENCH_PREEMPT_JOBS"] = "120"
+    env["REPRO_BENCH_PREEMPT_JSON"] = str(json_path)
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_preemption", "--smoke"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    doc = json.loads(json_path.read_text())
+    assert doc["bench"] == "preemption" and doc["num_jobs"] == 120
+    assert doc["scale"] == "smoke"
+    acc = doc["acceptance"]
+    assert "slo_lanes_improves_hit_rate" in acc
+    assert "slo_lanes_wait_within_band" in acc
+    for row in doc["results"].values():
+        assert row["completed"] == 120
+        for v in row.values():
+            if isinstance(v, float):
+                assert math.isfinite(v)
+
+
+def test_bench_preemption_registered():
+    import benchmarks.run as brun
+    assert "preemption" in brun.MODULES

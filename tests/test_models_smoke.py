@@ -77,7 +77,7 @@ def test_prefill_decode_consistency(arch):
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_batch_for_matches_specs(arch):
     cfg = get_config(arch, smoke=False)
-    from repro.configs.base import SHAPES, input_specs
+    from repro.configs.base import input_specs
     specs = input_specs(cfg, "train_4k")
     # host-sharded batch materialization (host 0 of 64)
     b = batch_for(cfg, "train_4k", num_hosts=64, host_id=0)

@@ -15,7 +15,7 @@ from repro.core.env import RLPrioritizer, StreamStats
 from repro.core.types import Job
 from repro.rl import (EpisodeCutter, RewardWeights, StreamingConfig,
                       StreamingTrainer, WindowStats, shaped_reward)
-from repro.sched import SchedulerEngine, get_scenario
+from repro.sched import get_scenario
 
 
 def _state(n=6, seed=0):

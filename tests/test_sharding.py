@@ -1,9 +1,6 @@
-import jax
-import pytest
 from jax.sharding import PartitionSpec as PS
 
-from repro.sharding.specs import (DEFAULT_RULES, logical_spec, sanitize_spec,
-                                  spec_tree)
+from repro.sharding.specs import logical_spec, sanitize_spec, spec_tree
 
 
 class FakeMesh:

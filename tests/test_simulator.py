@@ -1,5 +1,3 @@
-import numpy as np
-import pytest
 from conftest import hypothesis_or_stubs
 
 given, settings, st = hypothesis_or_stubs()

@@ -1,6 +1,5 @@
 """End-to-end behaviour tests for the paper's system (RLTune)."""
 import numpy as np
-import pytest
 
 from repro.core import improvement, reward_from_scores
 from repro.core.trainer import RLTuneTrainer, TrainerConfig
@@ -91,9 +90,9 @@ def test_costmodel_platform_trace():
 
 def test_live_driver_rescan_and_sla():
     """Live mode (paper Sec 3.1.2/5.6): 1-minute rescan loop + SLA bypass."""
-    from repro.core import Simulator, generate_trace, make_cluster
+    from repro.core import generate_trace, make_cluster
     from repro.core.agent import PPOAgent, PPOConfig
-    from repro.core.live import LiveConfig, LivePrioritizer, run_live
+    from repro.core.live import LiveConfig, run_live
 
     jobs = generate_trace("helios", 48, seed=9)
     sla_user = jobs[10].user

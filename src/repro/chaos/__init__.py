@@ -1,0 +1,28 @@
+"""Chaos fault injection and graceful control-plane degradation.
+
+Correlated failure bursts, spot-reclamation waves, straggler storms and
+federation blackouts (``ChaosSchedule`` + injectors), plus the degradation
+ladder the control plane falls down when decision latency blows its
+budget (``DegradationPolicy``).  This package imports only ``repro.core``
+and ``repro.lifecycle`` — never ``repro.sched``/``repro.fed``, which
+import *it* — so the engine stays chaos-agnostic behind duck-typed hooks.
+"""
+from repro.chaos.degradation import DegradationPolicy
+from repro.chaos.schedule import (
+    SPOT_RECLAMATION_COST,
+    ChaosAction,
+    ChaosEvent,
+    ChaosInjector,
+    ChaosSchedule,
+    FleetChaosInjector,
+)
+
+__all__ = [
+    "SPOT_RECLAMATION_COST",
+    "ChaosAction",
+    "ChaosEvent",
+    "ChaosInjector",
+    "ChaosSchedule",
+    "DegradationPolicy",
+    "FleetChaosInjector",
+]

@@ -28,25 +28,68 @@ class FaultModel:
 
 
 class FaultInjector:
-    """Generates failure / recovery / straggler events for a cluster."""
+    """Generates failure / recovery / straggler events for a cluster.
+
+    Timelines are drawn per node from one sequential RNG at construction
+    (deterministic in ``model.seed``), so two injectors over the same model
+    and node count carry byte-identical event heaps.  Two invariants:
+
+    - **Pair-closing**: every ``fail``/``slow`` pushes its matching
+      ``recover``/``unslow`` companion even when the companion lands past
+      ``horizon`` — only the *failure draw* is horizon-bounded, so a node
+      can never end a run permanently failed or slowed by timeline
+      truncation (pinned by ``tests/test_faults.py``).
+    - **Extension determinism**: nodes added at runtime (autoscaler
+      scale-ups) get their own timeline via :meth:`extend_node`, seeded by
+      ``(model.seed, node_id)`` — independent of when the node appears and
+      of every other node's draws, so a grown cluster replays identically.
+    """
 
     def __init__(self, model: FaultModel, num_nodes: int, horizon: float):
         self.model = model
+        self.num_nodes = num_nodes
+        self.horizon = horizon
         rng = np.random.default_rng(model.seed)
         self.events: list[tuple[float, str, int]] = []  # (time, kind, node)
         for node in range(num_nodes):
-            t = 0.0
-            while True:
-                t += float(rng.exponential(model.mtbf_per_node))
-                if t >= horizon:
-                    break
-                if rng.random() < model.straggler_prob:
-                    heapq.heappush(self.events, (t, "slow", node))
-                    heapq.heappush(self.events, (t + model.straggler_duration,
-                                                 "unslow", node))
-                else:
-                    heapq.heappush(self.events, (t, "fail", node))
-                    heapq.heappush(self.events, (t + model.repair_time, "recover", node))
+            self._draw_timeline(rng, node, 0.0)
+
+    def _draw_timeline(self, rng, node: int, start: float) \
+            -> list[tuple[float, str, int]]:
+        """Draw one node's failure/straggler timeline from ``start`` and
+        push it onto the heap (in draw order, exactly as the seed
+        constructor did).  Companion (recover/unslow) events are pushed
+        unconditionally — the pair-close invariant.  Returns the pushed
+        events."""
+        model = self.model
+        drawn: list[tuple[float, str, int]] = []
+        t = start
+        while True:
+            t += float(rng.exponential(model.mtbf_per_node))
+            if t >= self.horizon:
+                break
+            if rng.random() < model.straggler_prob:
+                drawn.append((t, "slow", node))
+                drawn.append((t + model.straggler_duration, "unslow", node))
+            else:
+                drawn.append((t, "fail", node))
+                drawn.append((t + model.repair_time, "recover", node))
+        for e in drawn:
+            heapq.heappush(self.events, e)
+        return drawn
+
+    def extend_node(self, node: int, start: float) \
+            -> list[tuple[float, str, int]]:
+        """Seed a deterministic failure timeline for a node added at
+        runtime (autoscaler scale-up), starting its MTBF clock at ``start``.
+        The timeline is drawn from a fresh RNG seeded by ``(model.seed,
+        node)``, so it depends only on the model and the node id — never on
+        how many events the construction-time RNG consumed.  Returns the
+        newly pushed events (the engine mirrors them as marker events)."""
+        rng = np.random.default_rng([self.model.seed, node])
+        drawn = self._draw_timeline(rng, node, start)
+        self.num_nodes = max(self.num_nodes, node + 1)
+        return drawn
 
     def next_event_time(self) -> float:
         return self.events[0][0] if self.events else float("inf")

@@ -33,6 +33,8 @@ percentiles and per-cluster ``BatchResult``s.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import math
 from typing import Callable, Iterable, Sequence
 
@@ -95,6 +97,16 @@ class FleetResult:
 
 def _pct(arr: np.ndarray | None, q: float) -> float:
     return float(np.percentile(arr, q)) if arr is not None and arr.size else 0.0
+
+
+#: Deferred-route retry backoff: first retry after DEFER_BASE_S, doubling
+#: per failed attempt up to DEFER_MAX_S; after DEFER_MAX_ATTEMPTS the job is
+#: force-routed onto the best surviving member even if nominally too big
+#: for any of them (it then waits in that member's queue like any other
+#: temporarily-unplaceable job).
+DEFER_BASE_S = 60.0
+DEFER_MAX_S = 3600.0
+DEFER_MAX_ATTEMPTS = 8
 
 
 class FederatedScheduler:
@@ -179,35 +191,111 @@ class FederatedScheduler:
         #: routing only, bit-identical to the pre-lifecycle federation
         self.migration = migration
         self.migrations: list = []              # executed MigrationEvents
+        #: members currently blacked out by chaos (every node down): routing
+        #: masks them with zero-capacity views — substitution, never list
+        #: filtering, because routers index ``views[i]`` positionally
+        self.offline: set[int] = set()
+        self._blackout_downed: dict[int, list[int]] = {}
+        #: jobs whose route found no *online* capable member, parked for
+        #: retry with exponential backoff: (retry_at, seq, attempts, job)
+        self._deferred: list[tuple[float, int, int, Job]] = []
+        self._defer_seq = itertools.count()
+        self.deferrals = 0                      # total defer decisions
+        self.chaos_actions: list = []           # fleet ChaosActions applied
 
     # ------------------------------------------------------------- ingest ----
+    def _routing_views(self) -> list[ClusterView]:
+        """The views routers actually see: blacked-out members are masked
+        by *substituting* a zero-capacity ``ClusterInfo`` (routers index
+        ``views[i]`` positionally, so the list shape must never change) —
+        the capable-cluster filter then degrades to the surviving set."""
+        if not self.offline:
+            return self._views
+        views = list(self._views)
+        for i in self.offline:
+            v = views[i]
+            views[i] = ClusterView(
+                ClusterInfo(index=i, name=v.info.name, total_gpus=0,
+                            total_by_type={}), v.snap)
+        return views
+
+    def _any_online_capable(self, job: Job) -> bool:
+        return any(v.info.capacity_for(job.gpu_type) >= job.num_gpus
+                   for i, v in enumerate(self._views)
+                   if i not in self.offline)
+
+    def _route_one(self, job: Job, *, force: bool = False) -> bool:
+        """Route one job onto an engine; returns False when no online
+        member could ever place it (caller defers).  ``force`` skips the
+        capability check — the post-backoff escape hatch — but still
+        routes on the online-masked views."""
+        views = self._routing_views()
+        if self.offline and not force and not self._any_online_capable(job):
+            return False
+        idx = self.router.route(job, views)
+        if not 0 <= idx < len(self.engines):
+            raise RuntimeError(
+                f"router {self.router.name!r} returned cluster {idx} "
+                f"for job {job.job_id} (fleet has {len(self.engines)})")
+        self.engines[idx].submit((job,))
+        self.routed[idx] += 1
+        self.routes[job.job_id] = idx
+        # refresh only the routed cluster's view: O(1), and the next
+        # job's routing sees this one in the queue load
+        self._views[idx] = ClusterView(self.infos[idx],
+                                       self.engines[idx].snapshot())
+        return True
+
+    def _defer(self, job: Job, now: float, attempts: int) -> None:
+        delay = min(DEFER_BASE_S * 2 ** attempts, DEFER_MAX_S)
+        heapq.heappush(self._deferred,
+                       (now + delay, next(self._defer_seq), attempts + 1,
+                        job))
+        self.deferrals += 1
+
+    def _retry_deferred(self, now: float, *, all_parked: bool = False) -> int:
+        """Re-attempt parked routes due by ``now`` (``all_parked`` retries
+        everything regardless of backoff — the member-restore path, where
+        capacity just changed fundamentally); failures back off again, and
+        a job out of attempts force-routes onto the best surviving member
+        (or keeps waiting while the whole fleet is dark).  Returns how many
+        jobs got routed."""
+        due = []
+        while self._deferred and (all_parked
+                                  or self._deferred[0][0] <= now + 1e-9):
+            due.append(heapq.heappop(self._deferred))
+        routed = 0
+        for _, _, attempts, job in due:
+            force = (attempts >= DEFER_MAX_ATTEMPTS
+                     and len(self.offline) < len(self.engines))
+            if self._route_one(job, force=force):
+                routed += 1
+            else:
+                self._defer(job, now, attempts)
+        return routed
+
     def submit(self, jobs: Iterable[Job]) -> int:
         """Route each job to one engine at submit time (snapshot-only,
         O(N clusters) per job).  Jobs are ingested in submit-time order —
-        the same normalization a single engine applies to a batch."""
+        the same normalization a single engine applies to a batch.  Jobs
+        no *online* member could ever place (mid-blackout arrivals needing
+        a dark member's SKU) are parked and retried with backoff."""
         batch = sorted(jobs, key=lambda j: j.submit_time)
         for job in batch:
-            idx = self.router.route(job, self._views)
-            if not 0 <= idx < len(self.engines):
-                raise RuntimeError(
-                    f"router {self.router.name!r} returned cluster {idx} "
-                    f"for job {job.job_id} (fleet has {len(self.engines)})")
-            self.engines[idx].submit((job,))
-            self.routed[idx] += 1
-            self.routes[job.job_id] = idx
-            # refresh only the routed cluster's view: O(1), and the next
-            # job's routing sees this one in the queue load
-            self._views[idx] = ClusterView(self.infos[idx],
-                                           self.engines[idx].snapshot())
+            if not self._route_one(job):
+                self._defer(job, job.submit_time, attempts=0)
         return len(batch)
 
     # ------------------------------------------------------------ queries ----
     @property
     def done(self) -> bool:
-        return all(e.done for e in self.engines)
+        return not self._deferred and all(e.done for e in self.engines)
 
     def next_event_time(self) -> float:
-        return min(e.next_event_time() for e in self.engines)
+        nxt = min(e.next_event_time() for e in self.engines)
+        if self._deferred:
+            nxt = min(nxt, self._deferred[0][0])
+        return nxt
 
     def snapshot(self) -> FleetSnapshot:
         snaps = tuple(e.snapshot() for e in self.engines)
@@ -240,6 +328,9 @@ class FederatedScheduler:
         if until != math.inf:
             self._control(until)
         self._refresh_views()
+        if self._deferred and until != math.inf:
+            if self._retry_deferred(until):
+                self._refresh_views()
         if self.migration is not None and until != math.inf:
             if self._migrate(until):
                 self._refresh_views()
@@ -323,6 +414,58 @@ class FederatedScheduler:
                 self.infos[i] = info
             self._views[i] = ClusterView(info, snap)
 
+    # -------------------------------------------------------------- chaos ----
+    def blackout_member(self, idx: int, at: float) -> list[int]:
+        """Take every up node of member ``idx`` down at once (federation
+        blackout): running gangs checkpoint-kill into the member's own
+        queue, the member is marked offline, and routing degrades to the
+        surviving capable set.  Returns the node ids actually downed (the
+        set :meth:`restore_member` brings back — organically-failed nodes
+        keep their own repair timelines)."""
+        eng = self.engines[idx]
+        if at > eng.now:
+            eng.advance_to(at)
+        cluster = eng.cluster
+        downed: list[int] = []
+        for node in range(len(cluster.total_gpus)):
+            if not cluster.retired[node] and not cluster.node_down[node]:
+                eng.force_fail(node)
+                downed.append(node)
+        self._blackout_downed[idx] = downed
+        self.offline.add(idx)
+        self._refresh_views()
+        return downed
+
+    def restore_member(self, idx: int, at: float) -> list[int]:
+        """Bring a blacked-out member back: recover exactly the nodes the
+        blackout downed, reschedule its queue, and immediately retry every
+        parked route (the member's capacity is visible again).  Returns
+        the recovered node ids."""
+        eng = self.engines[idx]
+        if at > eng.now:
+            eng.advance_to(at)
+        downed = self._blackout_downed.pop(idx, [])
+        for node in downed:
+            eng.force_recover(node)
+        eng.reschedule(at=at)
+        self.offline.discard(idx)
+        self._refresh_views()
+        self._retry_deferred(at, all_parked=True)
+        return downed
+
+    def note_chaos(self, actions, now: float) -> None:
+        """Record fleet chaos actions and forward each to its member's
+        telemetry; refreshes views so the next routing decision sees the
+        post-chaos capacity."""
+        self.chaos_actions.extend(actions)
+        for a in actions:
+            if 0 <= a.cluster < len(self.telemetries):
+                tel = self.telemetries[a.cluster]
+                note = getattr(tel, "note_chaos_events", None)
+                if note is not None:
+                    note([a])
+        self._refresh_views()
+
     # ------------------------------------------------------------- result ----
     def finalize_telemetry(self) -> None:
         """Force an end-of-run sample on every cluster's telemetry."""
@@ -388,6 +531,7 @@ def run_fleet(
     optimized: bool = True,
     autoscaler_factory: Callable | None = None,
     migration=None,
+    chaos=None,
 ) -> FleetStreamResult:
     """Replay a fleet scenario (or a prebuilt ``FleetRun``) through a fresh
     federation in lockstep rescan windows: each window's arrivals are routed
@@ -404,9 +548,20 @@ def run_fleet(
     ``migration`` attaches a ``repro.lifecycle.migration`` policy: waiting
     jobs re-route between members at every window edge when fresh snapshots
     show a sufficiently better home (``migration=None`` keeps the one-shot
-    routing, bit-identical to the pre-lifecycle federation)."""
+    routing, bit-identical to the pre-lifecycle federation).
+
+    ``chaos`` attaches a ``repro.chaos.FleetChaosInjector`` (ticking first
+    at every window edge, like ``service.run_stream``): ``None`` wraps the
+    fleet run's own ``ChaosSchedule`` if it declares one, ``False`` forces
+    chaos off, anything else is used directly."""
     if isinstance(run, str):
         run = get_fleet_scenario(run).build(num_jobs, seed)
+    run_chaos = getattr(run, "chaos", None)
+    if chaos is None and run_chaos is not None:
+        from repro.chaos import FleetChaosInjector
+        chaos = FleetChaosInjector(run_chaos)
+    elif chaos is False:
+        chaos = None
     factory = prioritizer_factory or (
         lambda i: wrap_tenancy(PolicyPrioritizer(make_policy(policy)),
                                run.sla_users, run.vc_quotas))
@@ -438,6 +593,15 @@ def run_fleet(
             feed = hi
         if feed >= len(jobs) and (fed.done
                                   or fed.next_event_time() == math.inf):
+            if not fed.done and chaos is not None \
+                    and chaos.next_time() < math.inf:
+                # dry heaps with work still queued (or parked routes): only
+                # a chaos event — e.g. the restore ending a blackout — can
+                # unblock them; hop to its window edge and tick
+                t = t0 + math.ceil((chaos.next_time() - t0) / iv) * iv
+                fed.step(t)
+                chaos.control(fed, t)
+                continue
             if fed.done or autoscalers is None:
                 break
             # starved member(s) with dry heaps: only added capacity can
@@ -450,12 +614,16 @@ def run_fleet(
         nxt = fed.next_event_time()
         if feed < len(jobs):
             nxt = min(nxt, jobs[feed].submit_time)
+        if chaos is not None:
+            nxt = min(nxt, chaos.next_time())
         if nxt > t + iv:
             t = t0 + math.floor((nxt - t0) / iv) * iv
             continue
         fed.step(t + iv)
         t += iv
         windows += 1
+        if chaos is not None:
+            chaos.control(fed, t)
     fed.finalize_telemetry()
     return FleetStreamResult(result=fed.result(), snapshot=fed.snapshot(),
                              telemetries=fed.telemetries, windows=windows,

@@ -27,6 +27,10 @@ Registry: ``FLEET_SCENARIOS`` maps name -> ``FleetScenario``; use
                            the queue piles up behind the storm, the case
                            ``repro.lifecycle`` cross-cluster migration
                            exists to drain.
+- ``fleet-blackout``     — one member loses *all* nodes mid-run for 15% of
+                           the horizon (``repro.chaos`` blackout): routers
+                           degrade to the survivors, parked routes retry
+                           with backoff when the member returns.
 """
 from __future__ import annotations
 
@@ -52,6 +56,10 @@ class FleetRun:
     fault_models: tuple
     sla_users: frozenset = frozenset()
     vc_quotas: dict | None = None
+    #: optional fleet chaos timeline (a ``repro.chaos.ChaosSchedule`` whose
+    #: events carry member indices; duck-typed — ``run_fleet`` wraps it in
+    #: a fresh ``FleetChaosInjector`` per run)
+    chaos: object | None = None
 
     @classmethod
     def from_scenario(cls, run: ScenarioRun) -> "FleetRun":
@@ -59,7 +67,7 @@ class FleetRun:
         (the degenerate federation used by the differential tests)."""
         return cls(name=run.name, clusters=(run.spec,), jobs=run.jobs,
                    fault_models=(run.fault_model,), sla_users=run.sla_users,
-                   vc_quotas=run.vc_quotas)
+                   vc_quotas=run.vc_quotas, chaos=run.chaos)
 
     @property
     def total_gpus(self) -> int:
@@ -200,6 +208,24 @@ def _fleet_fault_migration(num_jobs: int, seed: int) -> FleetRun:
     return FleetRun(name="fleet-fault-migration", clusters=clusters,
                     jobs=merge_streams([r.jobs for r in runs]),
                     fault_models=(storm, None, None))
+
+
+@register_fleet("fleet-blackout",
+                "Three helios-like members; member 0 blacks out entirely at "
+                "35% of the horizon and returns 15% later — the federation "
+                "chaos stress (offline routing + deferred-route backoff).")
+def _fleet_blackout(num_jobs: int, seed: int) -> FleetRun:
+    from repro.chaos import ChaosSchedule
+    k = 3
+    clusters = tuple(_helios_like(3, 3, f"helios-bo-{i}") for i in range(k))
+    streams = [get_scenario("steady").build(n, seed + 41 * i).jobs
+               for i, n in enumerate(_split(num_jobs, k))]
+    jobs = merge_streams(streams)
+    horizon = jobs[-1].submit_time if jobs else 86400.0
+    chaos = ChaosSchedule().add_blackout(0.35 * horizon, cluster=0,
+                                         duration=0.15 * horizon)
+    return FleetRun(name="fleet-blackout", clusters=clusters, jobs=jobs,
+                    fault_models=(None,) * k, chaos=chaos)
 
 
 @register_fleet("fleet-sku-split",

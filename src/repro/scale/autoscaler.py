@@ -62,12 +62,16 @@ class ScaleEvent:
 @dataclasses.dataclass(frozen=True)
 class PoolSpec:
     """One elastic per-SKU pool: the node template scale-up clones and the
-    active-node bounds the controller must respect."""
+    active-node bounds the controller must respect.  ``preemptible`` marks
+    the pool as spot capacity — cheap but reclaimable: ``repro.chaos`` spot-
+    reclamation waves (``ChaosSchedule.spot_waves_for_pools``) target only
+    pools that opt in."""
 
     gpu_type: str
     template: NodeSpec
     min_nodes: int
     max_nodes: int
+    preemptible: bool = False
 
 
 def pools_from_spec(spec: ClusterSpec, *, min_frac: float = 0.25,

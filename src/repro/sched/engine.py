@@ -57,6 +57,8 @@ import dataclasses
 import heapq
 import itertools
 import math
+import pickle
+import time
 from typing import Iterable
 
 import numpy as np
@@ -206,10 +208,29 @@ class EngineSnapshot:
     preemptions: int = 0
     paused: int = 0
     resume_penalty_gpu_s: float = 0.0
+    nodes_down: int = 0
+    nodes_total: int = 0
+    reclaimed_jobs: int = 0
+    milp_fallbacks: int = 0
+    degraded_windows: int = 0
+    degraded_s: float = 0.0
 
     @property
     def in_flight(self) -> int:
         return self.num_pending + self.num_running
+
+    @property
+    def down_ratio(self) -> float:
+        """Fraction of provisioned (non-retired) nodes currently failed;
+        0.0 for an empty cluster (never a ZeroDivisionError)."""
+        return self.nodes_down / max(self.nodes_total, 1)
+
+    @property
+    def milp_fallback_ratio(self) -> float:
+        """Fraction of solver-eligible allocations that took the degraded
+        greedy path; 0.0 when the solver was never eligible."""
+        return self.milp_fallbacks / max(self.milp_calls
+                                         + self.milp_fallbacks, 1)
 
 
 class SchedulerEngine:
@@ -240,6 +261,7 @@ class SchedulerEngine:
         queue_window: int | None = None,   # None = DEFAULT_QUEUE_WINDOW
         hooks: Iterable[EngineHooks] = (),
         optimized: bool = True,
+        degradation=None,                  # duck-typed DegradationPolicy
     ):
         self.spec = spec
         self.prioritizer = prioritizer
@@ -253,6 +275,11 @@ class SchedulerEngine:
                              else DEFAULT_QUEUE_WINDOW)
         self.hooks: list[EngineHooks] = list(hooks)
         self.optimized = optimized
+        #: control-plane degradation ladder (see ``repro.chaos``); the
+        #: engine duck-types the policy so ``repro.sched`` never imports
+        #: ``repro.chaos``.  ``None`` (the default) never reads the
+        #: wall clock — pinned bit-identical to the pre-chaos engine.
+        self.degradation = degradation
 
         self.cluster = ClusterState(spec, cache=optimized)
         self._seq = itertools.count()
@@ -277,6 +304,17 @@ class SchedulerEngine:
         self.restarts = 0
         self.preemptions = 0
         self.resume_penalty_gpu_s = 0.0
+        #: chaos / degradation counters (surface in snapshot + telemetry)
+        self.reclaimed_jobs = 0          # jobs preempted by spot reclamation
+        self.milp_fallbacks = 0          # solver-eligible allocs gone greedy
+        self.degraded_windows = 0        # rescan windows forced to FCFS
+        self.degraded_s = 0.0            # sim-seconds spent FCFS-degraded
+        # degradation-ladder state (inert while self.degradation is None)
+        self._deg_fallback_open = 0      # greedy decisions left on breaker
+        self._deg_slow_streak = 0        # consecutive over-budget solves
+        self._deg_window_start: float | None = None
+        self._deg_window_wall = 0.0      # wall-s accrued in current bucket
+        self._deg_fcfs_until: float | None = None
         #: jobs checkpoint-suspended via pause_job: job_id -> Job (hold no
         #: GPUs, sit outside the pending queue until resume / migration)
         self.paused: dict[int, Job] = {}
@@ -306,7 +344,10 @@ class SchedulerEngine:
             return 0
         if self.t0 is None:
             self.t0 = batch[0].submit_time
-            self.now = self.t0
+            # never rewind: a virgin engine may already sit past t0 (e.g. a
+            # blacked-out federation member whose first route arrives after
+            # the restore advanced its clock)
+            self.now = max(self.now, self.t0)
         for j in batch:
             self.remaining[j.job_id] = j.runtime
             # a job submitted behind the clock is ingested *now*: the event
@@ -356,6 +397,13 @@ class SchedulerEngine:
             cordoned=int(self.cluster.cordoned.sum()),
             preemptions=self.preemptions, paused=len(self.paused),
             resume_penalty_gpu_s=self.resume_penalty_gpu_s,
+            nodes_down=int((self.cluster.node_down
+                            & ~self.cluster.retired).sum()),
+            nodes_total=int((~self.cluster.retired).sum()),
+            reclaimed_jobs=self.reclaimed_jobs,
+            milp_fallbacks=self.milp_fallbacks,
+            degraded_windows=self.degraded_windows,
+            degraded_s=self.degraded_s,
         )
 
     # ------------------------------------------------------ pending queue ----
@@ -472,6 +520,19 @@ class SchedulerEngine:
                     f"reschedule at t={at} would skip a queued event at "
                     f"t={self._events[0][0]}; step() there first")
             self.now = at
+        # nodes added since the fault timeline was drawn (autoscaler
+        # scale-ups) get their own deterministic timeline, seeded by
+        # (model.seed, node_id), starting their MTBF clock *now* — added
+        # capacity is no longer fault-immune
+        if self._injector is not None:
+            n_nodes = len(self.cluster.total_gpus)
+            first_new = self._injector.num_nodes
+            for nid in range(first_new, n_nodes):
+                events = self._injector.extend_node(nid, self.now)
+                for (ft, _kind, node) in events:
+                    heapq.heappush(self._events,
+                                   (ft, next(self._seq), "fault", node))
+                self._guard_budget += 4 * len(events)
         # apply fail/recover/straggler transitions due by the (possibly
         # advanced) clock before scheduling, exactly like step() does — in
         # the service-loop contract this is a no-op (fault markers are heap
@@ -559,11 +620,36 @@ class SchedulerEngine:
                 pl = self.cluster.find_placement(job, other)
             return pl
         use_solver = self.allocator == "milp"
+        deg = self.degradation
+        timed = False
+        if use_solver and deg is not None:
+            if self._deg_fallback_open > 0:
+                # breaker open: take the greedy heuristic path for this
+                # decision and count it when the solver would have run
+                self._deg_fallback_open -= 1
+                use_solver = False
+                if len(ways) > 1:
+                    self.milp_fallbacks += 1
+            else:
+                timed = len(ways) > 1
         if use_solver and len(ways) > 1:
             self.milp_calls += 1
+        if not timed:
+            res = choose_allocation(self.cluster, job, ways, queue_rest,
+                                    lookahead_k=self.lookahead_k,
+                                    use_solver=use_solver)
+            return res.placement
+        t_solve = time.perf_counter()
         res = choose_allocation(self.cluster, job, ways, queue_rest,
                                 lookahead_k=self.lookahead_k,
-                                use_solver=use_solver)
+                                use_solver=True)
+        if time.perf_counter() - t_solve > deg.milp_budget_s:
+            self._deg_slow_streak += 1
+            if self._deg_slow_streak >= deg.trip_after:
+                self._deg_fallback_open = deg.reset_after_decisions
+                self._deg_slow_streak = 0
+        else:
+            self._deg_slow_streak = 0
         return res.placement
 
     # -- EASY backfill: earliest start for the reserved job -----------------
@@ -808,6 +894,76 @@ class SchedulerEngine:
         if remaining < job.runtime:
             self._resume_pending.add(job.job_id)
 
+    # ------------------------------------------------------- chaos entry ----
+    def force_fail(self, node: int, *,
+                   ckpt_interval: float | None = None) -> int:
+        """Chaos-injected node failure (rack burst / blackout member):
+        identical semantics to an organic ``fail`` fault event — the node
+        goes down and every running job touching it checkpoint-kills and
+        requeues.  No-op (returns 0) on retired or already-down nodes, so
+        bursts compose idempotently with organic timelines.  Returns the
+        number of jobs killed."""
+        cluster = self.cluster
+        if node >= len(cluster.total_gpus) or cluster.retired[node] \
+                or cluster.node_down[node]:
+            return 0
+        cluster.fail_node(node)
+        hit = 0
+        for jid in [jid for jid, rec in self.running.items()
+                    if node in rec[1]]:
+            self._kill_job(jid, preserve_ckpt=True,
+                           ckpt_interval=ckpt_interval)
+            hit += 1
+        return hit
+
+    def force_recover(self, node: int) -> bool:
+        """Chaos-injected recovery; no-op on retired or up nodes."""
+        cluster = self.cluster
+        if node >= len(cluster.total_gpus) or cluster.retired[node] \
+                or not cluster.node_down[node]:
+            return False
+        cluster.recover_node(node)
+        return True
+
+    def force_slow(self, node: int, slowdown: float) -> bool:
+        """Chaos-injected straggling: the node degrades to ``slowdown``
+        speed and running jobs rescale (or checkpoint-migrate, per the
+        straggler-migration rule)."""
+        if node >= len(self.cluster.total_gpus) \
+                or self.cluster.retired[node]:
+            return False
+        self.slow_nodes[node] = float(slowdown)
+        self._rescale_running(node)
+        return True
+
+    def force_unslow(self, node: int) -> bool:
+        """Lift a chaos-injected slowdown."""
+        if self.slow_nodes.pop(node, None) is None:
+            return False
+        self._rescale_running(node)
+        return True
+
+    def reclaim_node(self, node: int, cost) -> int:
+        """Spot reclamation: *preempt* (not fault-kill) every running job
+        touching ``node`` at the ``cost`` checkpoint economics — typically
+        harsher than the organic fault grid — then take the node down.
+        Jobs requeue through the normal preemption path (counted in both
+        ``preemptions`` and ``reclaimed_jobs``); the node returns via
+        :meth:`force_recover` when the wave's outage span elapses.
+        Returns the number of jobs reclaimed."""
+        cluster = self.cluster
+        if node >= len(cluster.total_gpus) or cluster.retired[node] \
+                or cluster.node_down[node]:
+            return 0
+        hit = 0
+        for jid in [jid for jid, rec in self.running.items()
+                    if node in rec[1]]:
+            self.preempt_job(jid, cost)
+            self.reclaimed_jobs += 1
+            hit += 1
+        cluster.fail_node(node)
+        return hit
+
     def _finish_job(self, jid: int) -> None:
         rec = self.running.pop(jid, None)
         if rec is None:
@@ -910,6 +1066,53 @@ class SchedulerEngine:
                 fn(queue, order, self.now, self)
 
     def _try_schedule(self) -> None:
+        deg = self.degradation
+        if deg is None:
+            return self._schedule_pass()
+        self._deg_roll(self.now)
+        t_pass = time.perf_counter()
+        try:
+            self._schedule_pass()
+        finally:
+            self._deg_window_wall += time.perf_counter() - t_pass
+
+    def _deg_roll(self, now: float) -> None:
+        """Close elapsed degradation buckets.  A bucket whose accrued
+        scheduling-pass wall time blew ``window_deadline_s`` forces the
+        next ``fcfs_windows`` buckets of sim time to rank FCFS; the forced
+        span is accounted to ``degraded_windows`` / ``degraded_s`` at trip
+        time (overlap-free when trips chain)."""
+        deg = self.degradation
+        start = self._deg_window_start
+        if start is None:
+            self._deg_window_start = now
+            return
+        if now < start + deg.window_s:
+            return
+        blown = self._deg_window_wall > deg.window_deadline_s
+        self._deg_window_wall = 0.0
+        steps = int((now - start) // deg.window_s)
+        edge = start + steps * deg.window_s
+        self._deg_window_start = edge
+        if blown:
+            until = edge + deg.fcfs_windows * deg.window_s
+            prev = self._deg_fcfs_until
+            base = edge if prev is None or prev < edge else prev
+            if until > base:
+                add = until - base
+                self.degraded_s += add
+                self.degraded_windows += int(round(add / deg.window_s))
+                self._deg_fcfs_until = until
+
+    def _fcfs_degraded(self) -> bool:
+        """True while the per-window circuit breaker holds the ranking at
+        FCFS.  ``pending`` is (submit_time, job_id)-sorted on both engine
+        paths at ranking time, so FCFS order is the identity permutation —
+        no prioritizer call, no score batch."""
+        return (self._deg_fcfs_until is not None
+                and self.now < self._deg_fcfs_until)
+
+    def _schedule_pass(self) -> None:
         if not self.optimized:
             return self._try_schedule_naive()
         cluster, prioritizer = self.cluster, self.prioritizer
@@ -920,7 +1123,9 @@ class SchedulerEngine:
             queue = self.pending[: self.queue_window]
             if not self._any_schedulable(queue):
                 return
-            if rank_window is not None:
+            if self._fcfs_degraded():
+                order = list(range(len(queue)))
+            elif rank_window is not None:
                 order = rank_window(queue, cluster, self.now,
                                     self._pindex.window(self.queue_window))
             else:
@@ -958,6 +1163,76 @@ class SchedulerEngine:
             if not cluster.can_schedule_now(top):
                 return
 
+    # ------------------------------------------------------------ failover ----
+    #: everything a restored engine needs to resume bit-identically.  Hooks
+    #: are deliberately absent (observational; the restoring driver re-
+    #: attaches its own), as are the derived caches ``_scratch`` /
+    #: ``_pindex`` / ``_rank_window`` (rebuilt on load).
+    _STATE_ATTRS = (
+        "spec", "prioritizer", "allocator", "backfill", "lookahead_k",
+        "fault_model", "straggler_migration", "max_sim_time", "queue_window",
+        "optimized", "degradation", "cluster", "_seq", "_events", "pending",
+        "running", "_finish_index", "remaining", "completed", "gpu_seconds",
+        "decisions", "milp_calls", "backfills", "restarts", "preemptions",
+        "resume_penalty_gpu_s", "paused", "_resume_pending", "slow_nodes",
+        "now", "t0", "submitted", "_injector", "_guard", "_guard_budget",
+        "reclaimed_jobs", "milp_fallbacks", "degraded_windows", "degraded_s",
+        "_deg_fallback_open", "_deg_slow_streak", "_deg_window_start",
+        "_deg_window_wall", "_deg_fcfs_until",
+    )
+
+    def save_state(self) -> bytes:
+        """Serialize the full scheduling state (clock, event heap, queues,
+        running set, fault timeline, counters) so a crashed control plane
+        can restore mid-stream and resume **bit-identically** to a run that
+        never crashed (pinned by ``tests/test_failover.py``).
+
+        One ``pickle.dumps`` over the whole attribute dict keeps shared
+        ``Job`` identity intact (a job referenced from both the pending
+        queue and a queued arrival event restores as one object).  A
+        prioritizer back-reference to the engine (``QuotaPrioritizer``'s
+        differential path) is detached for the dump and restored after."""
+        pri = self.prioritizer
+        had_ref = hasattr(pri, "engine")
+        ref = getattr(pri, "engine", None)
+        if had_ref:
+            pri.engine = None
+        try:
+            state = {name: getattr(self, name) for name in self._STATE_ATTRS}
+            return pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL)
+        finally:
+            if had_ref:
+                pri.engine = ref
+
+    @classmethod
+    def load_state(cls, blob: bytes,
+                   hooks: Iterable[EngineHooks] = ()) -> "SchedulerEngine":
+        """Restore an engine from :meth:`save_state`.  ``hooks`` re-attaches
+        the restoring driver's observers (telemetry, RL recorders); an
+        incremental ``QuotaPrioritizer`` travelling inside the blob is
+        re-appended as a hook automatically, its pickled usage intact."""
+        state = pickle.loads(blob)
+        eng = cls.__new__(cls)
+        for name, value in state.items():
+            setattr(eng, name, value)
+        eng.hooks = list(hooks)
+        # derived caches: rebuilt, never pickled
+        eng._scratch = None
+        if eng.optimized:
+            eng._pindex = _PendingFieldIndex()
+            for idx, job in enumerate(eng.pending):
+                eng._pindex.insert(idx, job)
+        else:
+            eng._pindex = None
+        eng._rank_window = getattr(eng.prioritizer, "rank_window", None)
+        pri = eng.prioritizer
+        if hasattr(pri, "engine"):
+            pri.engine = eng
+        if isinstance(pri, EngineHooks) and getattr(pri, "incremental",
+                                                    False):
+            eng.hooks.append(pri)
+        return eng
+
     def _try_schedule_naive(self) -> None:
         """Seed decision loop: full re-sort + linear `.remove()` per decision.
         Retained verbatim as the reference for differential equivalence."""
@@ -967,7 +1242,10 @@ class SchedulerEngine:
             queue = self.pending[: self.queue_window]
             if not self._any_schedulable(queue):
                 return
-            order = prioritizer.rank(queue, cluster, self.now)
+            if self._fcfs_degraded():
+                order = list(range(len(queue)))
+            else:
+                order = prioritizer.rank(queue, cluster, self.now)
             self.decisions += 1
             if self.hooks:
                 self._fire_decision(queue, order)

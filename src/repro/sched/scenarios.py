@@ -27,6 +27,9 @@ Registry: ``SCENARIOS`` maps name -> ``Scenario``; use
 - ``slo-lanes``    — deadline storm: congestion spike plus a deadline-
                      carrying job population and elastic gangs (the
                      ``repro.lifecycle`` preemption-policy stress).
+- ``chaos-storm``  — correlated chaos (``repro.chaos``): rack bursts, spot-
+                     reclamation waves and a straggler storm layered over
+                     mild organic faults and a deadline-carrying population.
 """
 from __future__ import annotations
 
@@ -52,6 +55,10 @@ class ScenarioRun:
     fault_model: FaultModel | None = None
     sla_users: frozenset[int] = frozenset()
     vc_quotas: dict[int, float] | None = None   # VC id -> cluster share
+    #: optional correlated-chaos timeline (a ``repro.chaos.ChaosSchedule``,
+    #: duck-typed to keep this module chaos-agnostic); the service driver
+    #: wraps it in a fresh injector per run
+    chaos: object | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -264,6 +271,40 @@ def _slo_lanes(num_jobs: int, seed: int) -> ScenarioRun:
             j.max_gpus = j.num_gpus * 2
     return ScenarioRun(name="slo-lanes", spec=make_cluster("helios"),
                        jobs=jobs)
+
+
+@register("chaos-storm",
+          "Correlated chaos over Helios: two rack bursts, two P100 spot-"
+          "reclamation waves, one straggler storm — layered on mild organic "
+          "faults and a ~20% deadline population (repro.chaos stress).")
+def _chaos_storm(num_jobs: int, seed: int) -> ScenarioRun:
+    from repro.chaos import ChaosSchedule
+    jobs = generate_trace("helios", num_jobs, seed=seed)
+    rng = np.random.default_rng(seed + 910)
+    dl = rng.random(len(jobs)) < 0.20
+    factors = rng.uniform(2.0, 4.0, size=len(jobs))
+    for j, is_dl, f in zip(jobs, dl, factors):
+        if is_dl:
+            j.deadline = j.submit_time + float(f) * max(j.est_runtime, 600.0)
+    horizon = jobs[-1].submit_time if jobs else 86400.0
+    # helios: nodes 0-4 are the P100 half, 5-9 the V100 half — each burst
+    # takes most of one rack; reclamation sweeps the preemptible P100 pool
+    chaos = (ChaosSchedule()
+             .add_rack_burst(0.25 * horizon, nodes=range(0, 4),
+                             down_for=2 * 3600.0, note="rack-P100")
+             .add_spot_wave(0.45 * horizon, sku="P100", count=3,
+                            down_for=2 * 3600.0)
+             .add_spot_wave(0.55 * horizon, sku="P100", count=3,
+                            down_for=2 * 3600.0)
+             .add_straggler_storm(0.6 * horizon, nodes=range(4, 8),
+                                  duration=3 * 3600.0, slowdown=0.4)
+             .add_rack_burst(0.7 * horizon, nodes=range(5, 9),
+                             down_for=3 * 3600.0, note="rack-V100"))
+    fm = FaultModel(mtbf_per_node=14 * 86400.0, repair_time=1800.0,
+                    straggler_prob=0.05, straggler_slowdown=0.5,
+                    ckpt_interval=900.0, seed=seed + 909)
+    return ScenarioRun(name="chaos-storm", spec=make_cluster("helios"),
+                       jobs=jobs, fault_model=fm, chaos=chaos)
 
 
 @register("sku-skew",

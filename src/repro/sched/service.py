@@ -195,6 +195,8 @@ def run_stream(
     on_window: "Callable[[SchedulerEngine, float, int], None] | None" = None,
     autoscaler=None,
     preemption=None,
+    chaos=None,
+    degradation=None,
 ) -> StreamResult:
     """Replay ``jobs`` through a fresh engine in rescan-interval windows.
 
@@ -219,6 +221,14 @@ def run_stream(
     per processed window, *after* the autoscaler — lifecycle moves act on
     the post-scaling cluster.  ``preemption=None`` likewise touches no
     engine code path (pinned bit-identical by tests).
+
+    ``chaos`` (a ``repro.chaos.ChaosInjector``) ticks *first* each
+    processed window — injected outages land before any controller reacts,
+    the order a real incident unfolds in — and its due times join the
+    window-hop bound so a burst scheduled in an otherwise-quiet stretch is
+    not skipped over.  ``degradation`` (a ``repro.chaos.DegradationPolicy``)
+    arms the engine's control-plane degradation ladder.  Both default to
+    ``None``: bit-identical to the pre-chaos service (pinned by tests).
     """
     if autoscaler is not None:
         # scale-ups append to spec.nodes: give the engine its own copy so a
@@ -233,7 +243,8 @@ def run_stream(
     engine = SchedulerEngine(
         spec, prioritizer, allocator=allocator, backfill=backfill,
         lookahead_k=lookahead_k, fault_model=fault_model,
-        queue_window=queue_window, hooks=all_hooks, optimized=optimized)
+        queue_window=queue_window, hooks=all_hooks, optimized=optimized,
+        degradation=degradation)
     if isinstance(prioritizer, QuotaPrioritizer):
         prioritizer.engine = engine
 
@@ -257,6 +268,15 @@ def run_stream(
             feed = hi
         if feed >= len(jobs) and (engine.done
                                   or engine.next_event_time() == math.inf):
+            if not engine.done and chaos is not None \
+                    and chaos.next_time() < math.inf:
+                # dry heap with queued jobs: only a chaos event (e.g. the
+                # recover closing a burst that took the last capable nodes)
+                # can unblock them — hop to its window edge and tick
+                t = t0 + math.ceil((chaos.next_time() - t0) / iv) * iv
+                engine.step(t)
+                chaos.control(engine, t, telemetry)
+                continue
             if engine.done or autoscaler is None:
                 break
             # starved queue with a dry heap: jobs are pending but no event
@@ -272,6 +292,8 @@ def run_stream(
         nxt = engine.next_event_time()
         if feed < len(jobs):
             nxt = min(nxt, jobs[feed].submit_time)
+        if chaos is not None:
+            nxt = min(nxt, chaos.next_time())
         if nxt > t + iv:
             # nothing due for a while: hop empty windows in one grid-aligned
             # jump, then re-run the feed so arrivals due in the hopped-to
@@ -281,6 +303,8 @@ def run_stream(
         engine.step(t + iv)
         t += iv
         windows += 1
+        if chaos is not None:
+            chaos.control(engine, t, telemetry)
         if autoscaler is not None:
             autoscaler.control(engine, t, telemetry)
         if preemption is not None:
@@ -308,13 +332,21 @@ def run_scenario(
     enforce_quotas: bool = True,
     autoscaler=None,
     preemption=None,
+    chaos=None,
+    degradation=None,
 ) -> StreamResult:
     """Build a registered scenario and stream it through the engine with
     rolling telemetry.  The scenario's SLA population and VC quotas are
     honoured by wrapping the prioritizer with the matching lane/gate.
     ``autoscaler`` attaches a ``repro.scale`` controller to the service
     loop (one control tick per processed rescan window); ``preemption``
-    attaches a ``repro.lifecycle`` controller ticking right after it."""
+    attaches a ``repro.lifecycle`` controller ticking right after it.
+
+    ``chaos`` selects the fault-injection layer: ``None`` (default) wraps
+    the scenario's own ``ChaosSchedule`` (if it declares one) in a fresh
+    ``ChaosInjector``; ``False`` forces chaos off even for chaos scenarios
+    (the benchmark's chaos-off arm); anything else is used as the injector
+    directly.  ``degradation`` arms the engine's degradation ladder."""
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
     run = scenario.build(num_jobs, seed) if isinstance(scenario, Scenario) \
@@ -324,9 +356,16 @@ def run_scenario(
                        enforce_quotas=enforce_quotas)
     telemetry = RollingTelemetry(window=telemetry_window,
                                  sample_interval=sample_interval)
+    run_chaos = getattr(run, "chaos", None)
+    if chaos is None and run_chaos is not None:
+        from repro.chaos import ChaosInjector
+        chaos = ChaosInjector(run_chaos)
+    elif chaos is False:
+        chaos = None
     return run_stream(
         run.spec, [j.clone_pending() for j in run.jobs], pri,
         rescan_interval=rescan_interval, allocator=allocator,
         backfill=backfill, fault_model=run.fault_model,
         queue_window=queue_window, telemetry=telemetry, chunked_submit=True,
-        autoscaler=autoscaler, preemption=preemption)
+        autoscaler=autoscaler, preemption=preemption, chaos=chaos,
+        degradation=degradation)

@@ -46,6 +46,12 @@ class TelemetrySample:
     requeues: int                # fault-driven restarts in window
     vc_fairness: float           # Jain's index over per-VC GPU-seconds
     preemptions: int = 0         # lifecycle preempt/resize evictions in window
+    # chaos / degradation mirrors of the engine counters (cumulative; the
+    # deltas between consecutive samples localize a burst in time)
+    nodes_down: int = 0          # failed (non-retired) nodes at sample time
+    reclaimed: int = 0           # jobs spot-reclaimed so far
+    milp_fallbacks: int = 0      # solver-eligible allocs degraded to greedy
+    degraded_windows: int = 0    # rescan windows forced to FCFS so far
 
 
 def jain_index(shares: list[float]) -> float:
@@ -73,6 +79,7 @@ class RollingTelemetry:
         self._segments: collections.deque[tuple[float, float, float]] = \
             collections.deque()  # (t_start, t_end, busy_frac)
         self._last_t: float | None = None
+        self._first_t: float | None = None
         self._last_busy: float = 0.0
         self._next_sample: float | None = None
         self.total_finished = 0
@@ -94,6 +101,15 @@ class RollingTelemetry:
         self.migrations_in = 0
         self.migrations_out = 0
         self._preempts: collections.deque[float] = collections.deque()
+        # chaos accounting (repro.chaos): injector actions plus the engine's
+        # degradation counters mirrored at the last tick (getattr-guarded —
+        # pre-chaos engines simply read as zero)
+        self.chaos_events: list = []
+        self.reclaimed_jobs = 0
+        self.milp_fallbacks = 0
+        self.degraded_windows = 0
+        self.degraded_s = 0.0
+        self._last_nodes_down = 0
 
     # ------------------------------------------------------------ hook API ----
     def on_submit(self, job: Job, now: float) -> None: ...
@@ -119,6 +135,7 @@ class RollingTelemetry:
     def on_tick(self, now: float, engine) -> None:
         if self._last_t is None:
             self._last_t = now
+            self._first_t = now
             self._next_sample = now + self.sample_interval
         if now > self._last_t:
             dt = now - self._last_t
@@ -133,6 +150,12 @@ class RollingTelemetry:
         self._last_prov = float(prov)
         self._last_busy_gpus = float(busy)
         self._last_busy = busy / max(prov, 1)
+        down = getattr(cluster, "node_down", None)
+        self._last_nodes_down = 0 if down is None else int((down & mask).sum())
+        self.reclaimed_jobs = getattr(engine, "reclaimed_jobs", 0)
+        self.milp_fallbacks = getattr(engine, "milp_fallbacks", 0)
+        self.degraded_windows = getattr(engine, "degraded_windows", 0)
+        self.degraded_s = getattr(engine, "degraded_s", 0.0)
         self._evict(now)
         if now >= self._next_sample:
             self.samples.append(self._sample(now, engine))
@@ -184,6 +207,10 @@ class RollingTelemetry:
             requeues=len(self._requeues),
             vc_fairness=jain_index(list(by_vc.values())),
             preemptions=len(self._preempts),
+            nodes_down=self._last_nodes_down,
+            reclaimed=self.reclaimed_jobs,
+            milp_fallbacks=self.milp_fallbacks,
+            degraded_windows=self.degraded_windows,
         )
 
     # ------------------------------------------------------------ summaries ----
@@ -210,6 +237,11 @@ class RollingTelemetry:
         preemption controller emitted this tick."""
         self.preemption_events.extend(events)
 
+    def note_chaos_events(self, events) -> None:
+        """Record chaos-injector actions (``ChaosAction``s) applied this
+        control tick."""
+        self.chaos_events.extend(events)
+
     def note_migration(self, kind: str) -> None:
         """Record one cross-cluster migration touching this cluster
         (``kind`` is ``"in"`` or ``"out"``; reported by the federation)."""
@@ -234,6 +266,22 @@ class RollingTelemetry:
     def used_gpu_hours(self) -> float:
         """Integral of busy GPUs over simulated time."""
         return self.used_gpu_s / 3600.0
+
+    @property
+    def degraded_hours(self) -> float:
+        """Simulated time the control plane spent FCFS-degraded."""
+        return self.degraded_s / 3600.0
+
+    def degraded_fraction(self) -> float:
+        """Fraction of the observed span spent FCFS-degraded; 0.0 over an
+        empty or zero-length span (never a ZeroDivisionError)."""
+        if self._first_t is None or self._last_t is None:
+            return 0.0
+        span = self._last_t - self._first_t
+        return min(self.degraded_s / span, 1.0) if span > 0 else 0.0
+
+    def peak_nodes_down(self) -> int:
+        return max((s.nodes_down for s in self.samples), default=0)
 
     def peak_queue_len(self) -> int:
         return max((s.queue_len for s in self.samples), default=0)

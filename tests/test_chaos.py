@@ -1,0 +1,405 @@
+"""Tests for repro.chaos: correlated chaos schedules and injectors, the
+engine's forced-fault entry points (rack bursts, spot reclamation), the
+control-plane degradation ladder, federation blackouts with deferred-route
+backoff, and the chaos-off bit-identity pin."""
+import dataclasses
+import json
+import math
+import os
+import subprocess
+import sys
+
+import pytest
+from conftest import REPO, SRC
+
+from repro.chaos import (SPOT_RECLAMATION_COST, ChaosInjector, ChaosSchedule,
+                         DegradationPolicy)
+from repro.core import PolicyPrioritizer, make_policy
+from repro.core.types import ClusterSpec, Job, NodeSpec
+from repro.fed import (FederatedScheduler, FleetRun, get_fleet_scenario,
+                       list_fleet_scenarios, run_fleet)
+from repro.scale import PoolSpec
+from repro.sched import (SchedulerEngine, get_scenario, list_scenarios,
+                         run_scenario)
+from repro.sched.engine import EngineSnapshot
+
+
+def mk_job(i, gpus=1, gpu_type="any", submit=0.0, runtime=1000.0, **kw):
+    return Job(job_id=i, user=0, submit_time=submit, runtime=runtime,
+               est_runtime=runtime, num_gpus=gpus, gpu_type=gpu_type, **kw)
+
+
+def two_node_engine(**kw):
+    spec = ClusterSpec([NodeSpec(0, "P100", 8, 64, 512.0, 1.0),
+                        NodeSpec(1, "V100", 8, 64, 512.0, 1.5)], name="duo")
+    return SchedulerEngine(spec, PolicyPrioritizer(make_policy("fcfs")),
+                           allocator="pack", **kw)
+
+
+def job_tuples(jobs):
+    return sorted((j.job_id, j.start_time, j.finish_time, j.num_gpus,
+                   j.restarts) for j in jobs)
+
+
+# ---------------------------------------------------------------- schedule ----
+
+
+def test_rack_burst_emits_matched_pair():
+    sched = ChaosSchedule().add_rack_burst(100.0, [0, 1], 500.0, note="pdu")
+    kinds = [e.kind for e in sched.events]
+    assert kinds == ["fail", "recover"]
+    assert sched.events[0].nodes == sched.events[1].nodes == (0, 1)
+    assert sched.events[1].time == 600.0
+
+
+def test_straggler_storm_and_blackout_pairs():
+    sched = (ChaosSchedule()
+             .add_straggler_storm(10.0, [3], 90.0, slowdown=0.25)
+             .add_blackout(50.0, cluster=2, duration=25.0))
+    kinds = [e.kind for e in sched.events]
+    assert kinds == ["slow", "unslow", "blackout", "restore"]
+    assert sched.events[0].slowdown == 0.25
+    assert sched.events[3].time == 75.0 and sched.events[3].cluster == 2
+
+
+def test_sorted_events_is_stable_on_time_ties():
+    sched = (ChaosSchedule()
+             .add_spot_wave(100.0, sku="P100", count=2, down_for=50.0)
+             .add_spot_wave(100.0, sku="V100", count=1, down_for=50.0))
+    order = [e.sku for _, _, e in sched.sorted_events()]
+    assert order == ["P100", "V100"]          # insertion order breaks ties
+
+
+def test_spot_waves_target_only_preemptible_pools():
+    tmpl = NodeSpec(0, "T4", 2, 16, 128.0, 0.5)
+    pools = {"T4": PoolSpec("T4", tmpl, 1, 5, preemptible=True),
+             "A100": PoolSpec("A100", tmpl, 1, 4)}
+    sched = ChaosSchedule().spot_waves_for_pools(
+        pools, [100.0, 200.0], frac=0.5, down_for=300.0)
+    assert [e.kind for e in sched.events] == ["reclaim", "reclaim"]
+    assert all(e.sku == "T4" for e in sched.events)
+    assert all(e.count == math.ceil(0.5 * 5) for e in sched.events)
+
+
+def test_engine_injector_rejects_fleet_events():
+    inj = ChaosInjector(ChaosSchedule().add_blackout(0.0, 0, 10.0))
+    eng = two_node_engine()
+    with pytest.raises(ValueError, match="FleetChaosInjector"):
+        inj.control(eng, 0.0)
+
+
+# ------------------------------------------------- engine chaos entry points ----
+
+
+def test_rack_burst_kills_requeues_and_recovers():
+    eng = two_node_engine()
+    eng.submit([mk_job(0, gpus=8, runtime=50_000.0),
+                mk_job(1, gpus=8, runtime=50_000.0)])
+    eng.step(100.0)
+    assert len(eng.running) == 2
+    inj = ChaosInjector(ChaosSchedule().add_rack_burst(200.0, [0], 1000.0))
+    acts = inj.control(eng, 200.0)
+    assert [a.kind for a in acts] == ["fail"]
+    assert acts[0].jobs_hit == 1
+    assert eng.cluster.node_down[0] and not eng.cluster.node_down[1]
+    assert eng.snapshot().nodes_down == 1
+    eng.step(1200.0)
+    acts = inj.control(eng, 1200.0)
+    assert [a.kind for a in acts] == ["recover"]
+    assert not eng.cluster.node_down[0]
+    assert inj.next_time() == math.inf
+    eng.drain()
+    assert eng.done and len(eng.completed) == 2
+    # the killed gang restarted at least once
+    assert eng.restarts >= 1
+
+
+def test_force_fail_is_idempotent_and_bounds_checked():
+    eng = two_node_engine()
+    assert eng.force_fail(0) == 0                  # nothing running: 0 hit
+    assert eng.force_fail(0) == 0                  # already down: no-op
+    assert eng.force_fail(99) == 0                 # out of range: no-op
+    assert eng.force_recover(0) is True
+    assert eng.force_recover(0) is False           # already up: no-op
+
+
+def test_force_slow_rescales_and_unslow_restores():
+    eng = two_node_engine()
+    eng.submit([mk_job(0, gpus=8, runtime=10_000.0)])
+    eng.step(0.0)
+    assert eng.force_slow(0, 0.5)
+    assert eng.slow_nodes.get(0) == 0.5
+    assert eng.force_unslow(0)
+    assert 0 not in eng.slow_nodes
+    assert not eng.force_unslow(0)                 # not slowed: no-op
+    eng.drain()
+    assert eng.done
+
+
+def test_reclaim_node_preempts_at_spot_cost():
+    eng = two_node_engine()
+    eng.submit([mk_job(0, gpus=8, runtime=50_000.0)])
+    eng.step(100.0)
+    hit = eng.reclaim_node(0, SPOT_RECLAMATION_COST)
+    assert hit == 1
+    assert eng.reclaimed_jobs == 1 and eng.preemptions == 1
+    assert eng.cluster.node_down[0]
+    # harsher economics: a real restore penalty was booked for the resume
+    eng.force_recover(0)
+    eng.reschedule(at=eng.now)
+    eng.drain()
+    assert eng.done and len(eng.completed) == 1
+    assert eng.resume_penalty_gpu_s > 0.0
+
+
+def test_spot_wave_resolves_sku_and_self_closes():
+    eng = two_node_engine()
+    eng.submit([mk_job(0, gpus=8, gpu_type="P100", runtime=50_000.0)])
+    eng.step(50.0)
+    inj = ChaosInjector(ChaosSchedule().add_spot_wave(
+        100.0, sku="P100", count=1, down_for=400.0))
+    acts = inj.control(eng, 100.0)
+    assert acts[0].kind == "reclaim" and acts[0].nodes == (0,)
+    assert acts[0].jobs_hit == 1
+    # the paired recover was queued internally — the wave self-closes
+    assert inj.next_time() == 500.0
+    eng.step(500.0)
+    inj.control(eng, 500.0)
+    assert not eng.cluster.node_down[0]
+    assert inj.action_counts() == {"reclaim": 1, "recover": 1}
+    eng.drain()
+    assert eng.done
+
+
+# ------------------------------------------------------- degradation ladder ----
+
+
+def test_zero_budget_trips_milp_fallbacks():
+    run = get_scenario("steady").build(80, 0)
+    deg = DegradationPolicy(milp_budget_s=0.0, trip_after=1,
+                            reset_after_decisions=8)
+    sr = run_scenario(run, allocator="milp", degradation=deg)
+    assert len(sr.batch.jobs) == 80
+    assert sr.engine.milp_fallbacks > 0
+    assert sr.engine.snapshot().milp_fallback_ratio > 0.0
+
+
+def test_zero_window_deadline_degrades_to_fcfs_windows():
+    run = get_scenario("steady").build(80, 0)
+    deg = DegradationPolicy(window_deadline_s=0.0, fcfs_windows=2)
+    sr = run_scenario(run, allocator="pack", degradation=deg)
+    assert len(sr.batch.jobs) == 80
+    assert sr.engine.degraded_windows > 0
+    assert sr.engine.degraded_s > 0.0
+    assert 0.0 < sr.telemetry.degraded_fraction() <= 1.0
+
+
+def test_generous_budget_never_degrades():
+    run = get_scenario("steady").build(60, 0)
+    deg = DegradationPolicy(milp_budget_s=1e9, window_deadline_s=1e9)
+    sr = run_scenario(run, allocator="milp", degradation=deg)
+    base = run_scenario(get_scenario("steady").build(60, 0),
+                        allocator="milp")
+    assert sr.engine.milp_fallbacks == 0
+    assert sr.engine.degraded_windows == 0
+    # an un-tripped ladder is pure observation: identical schedule
+    assert job_tuples(sr.batch.jobs) == job_tuples(base.batch.jobs)
+
+
+def test_snapshot_ratios_are_zero_division_safe():
+    snap = EngineSnapshot(now=0.0, submitted=0, num_pending=0, num_running=0,
+                          num_completed=0, free_gpus=0, utilization=0.0,
+                          fragmentation=0.0, decisions=0, milp_calls=0,
+                          backfills=0, restarts=0)
+    assert snap.down_ratio == 0.0
+    assert snap.milp_fallback_ratio == 0.0
+
+
+# ---------------------------------------------------------------- scenarios ----
+
+
+def test_chaos_storm_scenario_registered():
+    assert "chaos-storm" in list_scenarios()
+    run = get_scenario("chaos-storm").build(60, 0)
+    assert run.chaos is not None and run.fault_model is not None
+    kinds = [e.kind for e in run.chaos.events]
+    assert kinds.count("fail") == kinds.count("recover") == 2
+    assert kinds.count("slow") == kinds.count("unslow") == 1
+    assert kinds.count("reclaim") == 2
+    # determinism: same seed, same timeline and jobs
+    again = get_scenario("chaos-storm").build(60, 0)
+    assert [(e.time, e.kind) for e in again.chaos.events] == \
+        [(e.time, e.kind) for e in run.chaos.events]
+    assert [(j.job_id, j.submit_time) for j in again.jobs] == \
+        [(j.job_id, j.submit_time) for j in run.jobs]
+
+
+def test_chaos_storm_completes_and_closes_all_outages():
+    sr = run_scenario("chaos-storm", num_jobs=150, seed=0, allocator="pack")
+    assert len(sr.batch.jobs) == 150
+    eng = sr.engine
+    assert not (eng.cluster.node_down & ~eng.cluster.retired).any()
+    assert eng.reclaimed_jobs >= 0 and eng.restarts > 0
+    counts = {a.kind: True for a in sr.telemetry.chaos_events}
+    assert "fail" in counts and "recover" in counts
+    assert sr.telemetry.peak_nodes_down() >= 4        # a whole rack at once
+
+
+def test_chaos_off_is_bit_identical_across_scenarios():
+    """chaos=False must reproduce the plain chaos-free stream exactly on
+    every registered scenario — the chaos plumbing is observational until
+    a schedule is attached."""
+    for name in list_scenarios():
+        plain = run_scenario(
+            dataclasses.replace(get_scenario(name).build(40, 0), chaos=None),
+            allocator="pack")
+        off = run_scenario(get_scenario(name).build(40, 0),
+                           allocator="pack", chaos=False)
+        assert job_tuples(off.batch.jobs) == job_tuples(plain.batch.jobs), name
+        assert off.engine.decisions == plain.engine.decisions, name
+        assert off.engine.backfills == plain.engine.backfills, name
+
+
+# --------------------------------------------------------------- federation ----
+
+
+def _duo_fleet():
+    a100 = ClusterSpec([NodeSpec(i, "A100", 8, 96, 1024.0, 3.0)
+                        for i in range(2)], name="a100")
+    v100 = ClusterSpec([NodeSpec(i, "V100", 8, 64, 512.0, 1.5)
+                        for i in range(2)], name="v100")
+    return a100, v100
+
+
+def test_blackout_member_masks_routing_and_restores():
+    fed = FederatedScheduler(_duo_fleet(), router="jsq")
+    downed = fed.blackout_member(0, at=0.0)
+    assert downed == [0, 1] and fed.offline == {0}
+    assert fed._routing_views()[0].info.total_gpus == 0
+    # "any" jobs route around the dark member
+    fed.submit([mk_job(i, gpus=4, submit=0.0, runtime=500.0)
+                for i in range(4)])
+    assert fed.engines[0].submitted == 0
+    assert fed.engines[1].submitted == 4
+    restored = fed.restore_member(0, at=10.0)
+    assert restored == [0, 1] and not fed.offline
+    fed.step()
+    assert fed.done
+
+
+def test_blackout_defers_sku_bound_jobs_until_restore():
+    """Jobs only the dark member can serve park in the deferred heap and
+    drain with backoff once the member returns."""
+    a100, v100 = _duo_fleet()
+    jobs = [mk_job(i, gpus=4, gpu_type="V100", submit=60.0 * i,
+                   runtime=400.0) for i in range(4)]
+    jobs += [mk_job(10 + i, gpus=8, gpu_type="A100", submit=2000.0 + 60.0 * i,
+                    runtime=600.0) for i in range(3)]
+    jobs.sort(key=lambda j: j.submit_time)
+    run = FleetRun(name="duo-blackout", clusters=(a100, v100), jobs=jobs,
+                   fault_models=(None, None),
+                   chaos=ChaosSchedule().add_blackout(1000.0, cluster=0,
+                                                      duration=6000.0))
+    sr = run_fleet(run, router="jsq")
+    fed = sr.fed
+    assert fed.done and not fed._deferred
+    assert fed.deferrals >= 3                 # every A100 job parked at least once
+    assert len(sr.result.jobs) == len(jobs)
+    assert {a.kind for a in fed.chaos_actions} == {"blackout", "restore"}
+    # the A100 jobs landed on the restored member, not force-routed early
+    assert sr.result.routed[0] >= 3
+    for j in sr.result.jobs:
+        if j.gpu_type == "A100":
+            assert j.start_time >= 7000.0     # after the 1000+6000 restore
+
+
+def test_fleet_blackout_scenario_registered_and_completes():
+    assert "fleet-blackout" in list_fleet_scenarios()
+    run = get_fleet_scenario("fleet-blackout").build(90, 0)
+    assert run.chaos is not None
+    sr = run_fleet(run, router="jsq", allocator="pack")
+    assert sr.fed.done and len(sr.result.jobs) == 90
+    counts = {}
+    for a in sr.fed.chaos_actions:
+        counts[a.kind] = counts.get(a.kind, 0) + 1
+    assert counts == {"blackout": 1, "restore": 1}
+    # all capacity back up at the end — the blackout closed
+    for eng in sr.fed.engines:
+        assert not (eng.cluster.node_down & ~eng.cluster.retired).any()
+
+
+def test_fleet_chaos_dispatches_engine_events_to_members():
+    run = get_fleet_scenario("fleet-steady").build(60, 0)
+    sched = (ChaosSchedule()
+             .add_rack_burst(600.0, [0, 1], 1800.0, cluster=1)
+             .add_spot_wave(900.0, sku="P100", count=1, down_for=1200.0,
+                            cluster=2))
+    sr = run_fleet(dataclasses.replace(run, chaos=sched), router="jsq",
+                   allocator="pack")
+    assert sr.fed.done and len(sr.result.jobs) == 60
+    kinds = {}
+    for a in sr.fed.chaos_actions:
+        kinds.setdefault(a.kind, []).append(a.cluster)
+    assert kinds["fail"] == [1]
+    assert kinds["reclaim"] == [2]
+    # both the burst recover and the wave's self-closing recover fired
+    assert sorted(kinds["recover"]) == [1, 2]
+    for eng in sr.fed.engines:
+        assert not (eng.cluster.node_down & ~eng.cluster.retired).any()
+
+
+def test_fleet_chaos_off_is_bit_identical():
+    run = get_fleet_scenario("fleet-blackout").build(60, 0)
+    off = run_fleet(run, router="jsq", allocator="pack", chaos=False)
+    plain = run_fleet(dataclasses.replace(run, chaos=None), router="jsq",
+                      allocator="pack")
+    assert job_tuples(off.result.jobs) == job_tuples(plain.result.jobs)
+    assert off.result.routed == plain.result.routed
+    assert off.fed.deferrals == plain.fed.deferrals == 0
+
+
+# ------------------------------------------------------------------ tooling ----
+
+
+def test_bench_chaos_smoke(tmp_path):
+    """The registered chaos bench must run end-to-end in --smoke mode and
+    emit a well-formed acceptance block (benches can't silently rot)."""
+    json_path = tmp_path / "BENCH_chaos.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_BENCH_CHAOS_JOBS"] = "120"
+    env["REPRO_BENCH_CHAOS_JSON"] = str(json_path)
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_chaos", "--smoke"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    doc = json.loads(json_path.read_text())
+    assert doc["bench"] == "chaos" and doc["num_jobs"] == 120
+    assert doc["scale"] == "smoke"
+    acc = doc["acceptance"]
+    assert "wait_within_band" in acc and "ladder_fired" in acc
+    assert acc["milp_fallbacks"] > 0
+    for row in doc["results"].values():
+        assert row["completed"] == 120
+        for v in row.values():
+            if isinstance(v, float):
+                assert math.isfinite(v)
+
+
+def test_bench_chaos_registered():
+    import benchmarks.run as brun
+    assert "chaos" in brun.MODULES
+
+
+@pytest.mark.slow
+def test_chaos_soak_storm_with_degradation():
+    """Long chaos soak: the full storm at 600 jobs under the strict ladder
+    still completes every job and closes every outage."""
+    deg = DegradationPolicy(milp_budget_s=0.0, trip_after=1,
+                            reset_after_decisions=16, window_deadline_s=0.0)
+    sr = run_scenario("chaos-storm", num_jobs=600, seed=1, allocator="milp",
+                      degradation=deg)
+    assert len(sr.batch.jobs) == 600
+    eng = sr.engine
+    assert eng.milp_fallbacks > 0 and eng.degraded_windows > 0
+    assert not (eng.cluster.node_down & ~eng.cluster.retired).any()

@@ -128,21 +128,86 @@ def test_fault_kill_on_cordoned_node_completes_the_drain():
     assert not eng.cluster.eligible_mask("any")[node]
 
 
-def test_faults_only_hit_initial_nodes_added_capacity_is_stable():
-    """FaultInjector draws per-node timelines at first submit; capacity
-    added later by the autoscaler has no fault timeline (documented), so
-    its jobs never restart from failures on the new node."""
-    spec = make_cluster("slurm-testbed")
-    eng = SchedulerEngine(spec, PolicyPrioritizer(make_policy("fcfs")),
-                          allocator="pack",
-                          fault_model=_model(mtbf_per_node=1800.0,
-                                             repair_time=300.0))
-    eng.submit([mk_job(0, gpus=1, runtime=10.0)])
-    eng.drain()
-    n0 = len(spec.nodes)
-    assert max(n for (_, _, n) in eng._injector.events or [(0, "", n0 - 1)]) \
-        < n0
+def test_pair_close_pushes_companions_past_horizon():
+    """Only the *failure draw* is horizon-bounded: a fail landing just
+    inside the horizon still pushes its recover companion even when the
+    repair completes past it, so a node can never end a run permanently
+    failed (or slowed) by timeline truncation."""
+    inj = FaultInjector(_model(repair_time=1e9), num_nodes=6,
+                        horizon=60 * 86400.0)
+    fails = [t for (t, k, _) in inj.events if k == "fail"]
+    recs = [t for (t, k, _) in inj.events if k == "recover"]
+    assert fails and len(fails) == len(recs)
+    assert all(t > inj.horizon for t in recs)      # every repair lands late
+    slow_inj = FaultInjector(_model(straggler_prob=1.0,
+                                    straggler_duration=1e9),
+                             num_nodes=6, horizon=60 * 86400.0)
+    slows = [t for (t, k, _) in slow_inj.events if k == "slow"]
+    unslows = [t for (t, k, _) in slow_inj.events if k == "unslow"]
+    assert slows and len(slows) == len(unslows)
+    assert all(t > slow_inj.horizon for t in unslows)
+
+
+# --------------------------------------------------- runtime-added capacity ----
+
+
+def test_extend_node_is_deterministic_and_pair_closed():
+    inj = FaultInjector(_model(mtbf_per_node=1800.0), num_nodes=2,
+                        horizon=10 * 86400.0)
+    drawn = inj.extend_node(2, start=5000.0)
+    assert drawn and all(n == 2 for (_, _, n) in drawn)
+    assert all(t > 5000.0 for (t, _, _) in drawn)
+    assert inj.num_nodes == 3
+    fails = [t for (t, k, _) in drawn if k == "fail"]
+    recs = [t for (t, k, _) in drawn if k == "recover"]
+    assert fails and len(fails) == len(recs)
+    # independent of the construction-time RNG's consumption: a fresh
+    # injector over a *different* initial node count draws the same
+    # timeline for the same (seed, node, start)
+    other = FaultInjector(_model(mtbf_per_node=1800.0), num_nodes=1,
+                          horizon=10 * 86400.0)
+    assert other.extend_node(2, start=5000.0) == drawn
+    # and the heap is exactly base timelines + the extension
+    base = FaultInjector(_model(mtbf_per_node=1800.0), num_nodes=2,
+                         horizon=10 * 86400.0)
+    assert sorted(inj.events) == sorted(base.events + drawn)
+
+
+def test_autoscaler_added_capacity_gets_a_fault_timeline():
+    """Nodes added at runtime are seeded a deterministic timeline the next
+    time the engine reschedules (the autoscaler's post-add kick), closing
+    the documented added-capacity-is-fault-immune gap."""
     from repro.core.types import NodeSpec
+
+    def grown_engine():
+        spec = make_cluster("slurm-testbed")   # add_node mutates spec.nodes
+        eng = SchedulerEngine(spec, PolicyPrioritizer(make_policy("fcfs")),
+                              allocator="pack",
+                              fault_model=_model(mtbf_per_node=1800.0,
+                                                 repair_time=300.0))
+        eng.submit([mk_job(0, gpus=1, runtime=10.0)])
+        # bounded step: draining would roll the clock through the whole
+        # fault timeline, past the horizon, leaving nothing to extend
+        eng.step(600.0)
+        assert eng.done
+        return eng
+
+    eng = grown_engine()
+    n0 = eng._injector.num_nodes
+    assert all(n < n0 for (_, _, n) in eng._injector.events)
     nid = eng.cluster.add_node(NodeSpec(0, "P100", 4, 32, 256.0, 1.0))
     assert nid == n0
-    assert all(n < n0 for (_, _, n) in eng._injector.events)
+    eng.reschedule(at=eng.now)
+    new_events = [e for e in eng._injector.events if e[2] == n0]
+    assert new_events, "added node must carry a fault timeline"
+    assert all(t > eng.now for (t, _, _) in new_events)
+    # marker events mirrored onto the engine heap so the clock reaches them
+    marked = [t for (t, _, kind, node) in eng._events
+              if kind == "fault" and node == n0]
+    assert len(marked) == len(new_events)
+    # deterministic: a second engine grown the same way draws identically
+    eng2 = grown_engine()
+    eng2.cluster.add_node(NodeSpec(0, "P100", 4, 32, 256.0, 1.0))
+    eng2.reschedule(at=eng2.now)
+    assert sorted(e for e in eng2._injector.events if e[2] == n0) \
+        == sorted(new_events)

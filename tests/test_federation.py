@@ -16,7 +16,7 @@ from repro.fed import (FederatedScheduler, FleetRun, ClusterInfo,
                        list_fleet_scenarios, list_routers, make_router,
                        merge_streams, run_fleet)
 from repro.sched import (QuotaPrioritizer, SchedulerEngine, get_scenario,
-                         list_scenarios, wrap_tenancy)
+                         list_scenarios, run_scenario, wrap_tenancy)
 from repro.sched.engine import EngineSnapshot
 
 
@@ -119,17 +119,26 @@ def test_single_cluster_hash_identical_to_bare_engine(name):
     is bit-identical to a bare SchedulerEngine on every registered scenario
     (routing, per-job submission, and lockstep windows are unobservable)."""
     run = get_scenario(name).build(64, seed=5)
-    pri = wrap_tenancy(PolicyPrioritizer(make_policy("fcfs")),
-                       run.sla_users, run.vc_quotas)
-    hooks = (pri,) if isinstance(pri, QuotaPrioritizer) else ()
-    eng = SchedulerEngine(run.spec, pri, allocator="pack",
-                          fault_model=run.fault_model, hooks=hooks)
-    if isinstance(pri, QuotaPrioritizer):
-        pri.engine = eng
-    eng.submit([j.clone_pending() for j in run.jobs])
-    eng.drain()
-    bare = {j.job_id: (j.start_time, j.finish_time, j.restarts)
-            for j in eng.completed}
+    if run.chaos is not None:
+        # chaos applies at rescan-window edges, so the windowed service
+        # loop (ChaosInjector) is the bare-engine reference here — the
+        # fleet side wraps the same schedule in a FleetChaosInjector
+        sr0 = run_scenario(run, allocator="pack", rescan_interval=60.0)
+        eng = sr0.engine
+        bare = {j.job_id: (j.start_time, j.finish_time, j.restarts)
+                for j in sr0.batch.jobs}
+    else:
+        pri = wrap_tenancy(PolicyPrioritizer(make_policy("fcfs")),
+                           run.sla_users, run.vc_quotas)
+        hooks = (pri,) if isinstance(pri, QuotaPrioritizer) else ()
+        eng = SchedulerEngine(run.spec, pri, allocator="pack",
+                              fault_model=run.fault_model, hooks=hooks)
+        if isinstance(pri, QuotaPrioritizer):
+            pri.engine = eng
+        eng.submit([j.clone_pending() for j in run.jobs])
+        eng.drain()
+        bare = {j.job_id: (j.start_time, j.finish_time, j.restarts)
+                for j in eng.completed}
 
     sr = run_fleet(FleetRun.from_scenario(run), router="hash",
                    allocator="pack", rescan_interval=60.0)

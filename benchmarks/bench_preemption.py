@@ -32,6 +32,7 @@ import platform
 import sys
 import time
 
+from benchmarks.common import provenance
 from repro.lifecycle import (ElasticGangPolicy, PreemptionController,
                              SloDeadlinePolicy)
 from repro.sched import get_scenario, run_scenario
@@ -134,6 +135,7 @@ def _emit_json(results: dict[str, dict], num_jobs: int, smoke: bool) -> dict:
         "results": {k: {m: (round(v, 4) if isinstance(v, float) else v)
                         for m, v in r.items()} for k, r in results.items()},
         "acceptance": _acceptance(results),
+        "provenance": provenance(seed=0),
     }
     with open(JSON_PATH, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)

@@ -28,6 +28,7 @@ import platform
 import sys
 import time
 
+from benchmarks.common import provenance
 from repro.core.agent import PPOConfig
 from repro.rl import (RLTuneTrainer, StreamingConfig, StreamingTrainer,
                       TrainerConfig)
@@ -144,6 +145,7 @@ def run(out: list[str] | None = None, smoke: bool = False) -> dict:
         "results": {k: {c: {m: round(v, 4) for m, v in cm.items()}
                         for c, cm in r.items()} for k, r in results.items()},
         "acceptance": acc,
+        "provenance": provenance(seed=0),
     }
     with open(JSON_PATH, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)

@@ -25,6 +25,7 @@ import time
 
 import numpy as np
 
+from benchmarks.common import provenance
 from repro.core import PolicyPrioritizer, make_policy
 from repro.sched import RollingTelemetry, SchedulerEngine, get_scenario
 
@@ -160,6 +161,7 @@ def _emit_json(results: dict[str, dict]) -> dict:
         "pre_pr_baseline_lat_mean_ms": PRE_PR_LAT_MEAN_MS,
         "speedup_vs_pre_pr": speedup,
         "deep_queue_latency_growth": growth,
+        "provenance": provenance(seed=0),
     }
     with open(JSON_PATH, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)

@@ -1,7 +1,12 @@
-"""Shared benchmark helpers: agent training/caching, evaluation, CSV rows."""
+"""Shared benchmark helpers: agent training/caching, evaluation, CSV rows,
+and the provenance stamp every ``BENCH_*.json`` artifact carries."""
 from __future__ import annotations
 
+import datetime
 import os
+import platform
+import subprocess
+import sys
 import time
 
 
@@ -20,6 +25,50 @@ TRAIN_BATCHES = int(os.environ.get("REPRO_BENCH_TRAIN_BATCHES",
 BATCH_SIZE = {"quick": 128, "full": 256}[SCALE]
 EVAL_BATCHES = int(os.environ.get("REPRO_BENCH_EVAL_BATCHES",
                                   {"quick": 4, "full": 10}[SCALE]))
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return "unknown"
+
+
+def provenance(seed: int | None = None) -> dict:
+    """Provenance stamp for ``BENCH_*.json`` artifacts: enough to answer
+    "what code, what toolchain, what knobs, when" for any number a later
+    PR compares against.  ``jax`` is imported guarded — CPU-only containers
+    without it still produce a valid stamp."""
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:  # noqa: BLE001 — any import-time failure reads as absent
+        jax_version = None
+    try:
+        import numpy
+        numpy_version = numpy.__version__
+    except Exception:  # noqa: BLE001
+        numpy_version = None
+    stamp = {
+        "git_sha": _git_sha(),
+        "python": sys.version.split()[0],
+        "jax": jax_version,
+        "numpy": numpy_version,
+        "host": platform.node() or "unknown",
+        "machine": platform.machine(),
+        "wall_clock_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "scale": SCALE,
+    }
+    if seed is not None:
+        stamp["seed"] = seed
+    return stamp
 
 
 def agent_path(trace: str, policy: str, metric: str, variant: str) -> str:

@@ -36,6 +36,7 @@ import dataclasses
 import heapq
 import itertools
 import math
+import time
 from typing import Callable, Iterable, Sequence
 
 import numpy as np
@@ -46,7 +47,7 @@ from repro.core.prioritizer import PolicyPrioritizer, Prioritizer
 from repro.core.types import ClusterSpec, Job
 from repro.fed.router import ClusterInfo, ClusterView, Router, make_router
 from repro.fed.scenarios import FleetRun, get_fleet_scenario
-from repro.sched.engine import SchedulerEngine
+from repro.sched.engine import MultiHooks, SchedulerEngine
 from repro.sched.service import QuotaPrioritizer, wrap_tenancy
 from repro.sched.telemetry import RollingTelemetry, jain_index
 
@@ -138,9 +139,16 @@ class FederatedScheduler:
         optimized: bool = True,
         autoscalers: Sequence | None = None,
         migration=None,
+        obs=None,
     ):
         if not clusters:
             raise ValueError("a federation needs at least one cluster")
+        #: fleet-level observability bundle (repro.obs.Observability):
+        #: members get per-cluster child bundles (disjoint trace pids, own
+        #: metric labels) and routing / deferral / migration / blackout
+        #: decisions count on the fleet registry.  None = bit-identical to
+        #: the un-instrumented federation (pinned by tests).
+        self.obs = obs
         fms = list(fault_models) if fault_models is not None \
             else [None] * len(clusters)
         if len(fms) != len(clusters):
@@ -169,9 +177,15 @@ class FederatedScheduler:
                 tel = RollingTelemetry(window=telemetry_window,
                                        sample_interval=sample_interval)
                 hooks.append(tel)
+            if obs is not None:
+                mobs = obs.member(i, name=spec.name or f"cluster{i}")
+                hooks.extend(mobs.hooks())
             if isinstance(pri, QuotaPrioritizer) and pri.incremental:
                 pri.reset_usage()
                 hooks.append(pri)
+            # one MultiHooks per engine: duck-typed observers get the full
+            # surface and a raising one cannot corrupt the member's window
+            hooks = [MultiHooks(*hooks)] if hooks else []
             engine = SchedulerEngine(
                 spec, pri, allocator=allocator, backfill=backfill,
                 lookahead_k=lookahead_k, fault_model=fms[i],
@@ -244,6 +258,13 @@ class FederatedScheduler:
         # job's routing sees this one in the queue load
         self._views[idx] = ClusterView(self.infos[idx],
                                        self.engines[idx].snapshot())
+        if self.obs is not None:
+            self.obs.count("repro_fed_routed_total",
+                           "jobs routed per member",
+                           cluster=self.infos[idx].name or str(idx))
+            if force:
+                self.obs.count("repro_fed_forced_routes_total",
+                               "post-backoff forced routes")
         return True
 
     def _defer(self, job: Job, now: float, attempts: int) -> None:
@@ -252,6 +273,9 @@ class FederatedScheduler:
                        (now + delay, next(self._defer_seq), attempts + 1,
                         job))
         self.deferrals += 1
+        if self.obs is not None:
+            self.obs.count("repro_fed_deferrals_total",
+                           "routes parked for backoff retry")
 
     def _retry_deferred(self, now: float, *, all_parked: bool = False) -> int:
         """Re-attempt parked routes due by ``now`` (``all_parked`` retries
@@ -360,19 +384,33 @@ class FederatedScheduler:
                 note = getattr(tel, "note_migration", None)
                 if note is not None:
                     note(kind)
+            if self.obs is not None:
+                self.obs.count(
+                    "repro_fed_migrations_total",
+                    "cross-cluster migrations executed",
+                    src=self.infos[mv.src].name or str(mv.src),
+                    dst=self.infos[mv.dst].name or str(mv.dst))
         return len(moves)
 
     def _control(self, now: float, stalled: bool = False) -> int:
         """Run every attached autoscaler's control tick; returns the number
         of scale events emitted fleet-wide."""
         acted = 0
-        for eng, scaler, tel in zip(self.engines, self.autoscalers,
-                                    self.telemetries):
+        for i, (eng, scaler, tel) in enumerate(zip(self.engines,
+                                                   self.autoscalers,
+                                                   self.telemetries)):
             if scaler is None:
                 continue
             if stalled and (eng.done or eng.next_event_time() != math.inf):
                 continue   # only starved members get the override
-            acted += len(scaler.control(eng, now, tel, stalled=stalled))
+            if self.obs is None:
+                acted += len(scaler.control(eng, now, tel, stalled=stalled))
+                continue
+            t0 = time.perf_counter()
+            events = scaler.control(eng, now, tel, stalled=stalled)
+            self.obs.member(i).note_controller(
+                "autoscaler", len(events), time.perf_counter() - t0, now)
+            acted += len(events)
         return acted
 
     def control_stalled(self, now: float) -> int:
@@ -434,6 +472,10 @@ class FederatedScheduler:
         self._blackout_downed[idx] = downed
         self.offline.add(idx)
         self._refresh_views()
+        if self.obs is not None:
+            self.obs.count("repro_fed_blackouts_total",
+                           "member blackouts applied",
+                           cluster=self.infos[idx].name or str(idx))
         return downed
 
     def restore_member(self, idx: int, at: float) -> list[int]:
@@ -464,6 +506,9 @@ class FederatedScheduler:
                 note = getattr(tel, "note_chaos_events", None)
                 if note is not None:
                     note([a])
+            if self.obs is not None:
+                self.obs.count("repro_chaos_actions_total",
+                               "fleet chaos actions applied", kind=a.kind)
         self._refresh_views()
 
     # ------------------------------------------------------------- result ----
@@ -511,6 +556,7 @@ class FleetStreamResult:
     telemetries: list
     windows: int
     fed: FederatedScheduler
+    obs: object | None = None
 
 
 def run_fleet(
@@ -532,6 +578,7 @@ def run_fleet(
     autoscaler_factory: Callable | None = None,
     migration=None,
     chaos=None,
+    obs=None,
 ) -> FleetStreamResult:
     """Replay a fleet scenario (or a prebuilt ``FleetRun``) through a fresh
     federation in lockstep rescan windows: each window's arrivals are routed
@@ -553,7 +600,13 @@ def run_fleet(
     ``chaos`` attaches a ``repro.chaos.FleetChaosInjector`` (ticking first
     at every window edge, like ``service.run_stream``): ``None`` wraps the
     fleet run's own ``ChaosSchedule`` if it declares one, ``False`` forces
-    chaos off, anything else is used directly."""
+    chaos off, anything else is used directly.
+
+    ``obs`` attaches a fleet-level ``repro.obs.Observability``: each member
+    engine gets its own child tracer/metrics/audit hooks (distinct trace
+    pids), control-plane ticks are timed, and the bundle is finalized
+    before the result is returned.  ``obs=None`` keeps the run bit-identical
+    to an unobserved fleet."""
     if isinstance(run, str):
         run = get_fleet_scenario(run).build(num_jobs, seed)
     run_chaos = getattr(run, "chaos", None)
@@ -575,7 +628,16 @@ def run_fleet(
         fault_models=run.fault_models, queue_window=queue_window,
         telemetry_window=telemetry_window, sample_interval=sample_interval,
         router_seed=router_seed, optimized=optimized,
-        autoscalers=autoscalers, migration=migration)
+        autoscalers=autoscalers, migration=migration, obs=obs)
+
+    def _chaos_tick(now):
+        if obs is None:
+            return chaos.control(fed, now)
+        t0_w = time.perf_counter()
+        applied = chaos.control(fed, now)
+        obs.note_controller("fleet-chaos", len(applied),
+                            time.perf_counter() - t0_w, now)
+        return applied
 
     jobs = sorted((j.clone_pending() for j in run.jobs),
                   key=lambda j: j.submit_time)
@@ -600,7 +662,7 @@ def run_fleet(
                 # unblock them; hop to its window edge and tick
                 t = t0 + math.ceil((chaos.next_time() - t0) / iv) * iv
                 fed.step(t)
-                chaos.control(fed, t)
+                _chaos_tick(t)
                 continue
             if fed.done or autoscalers is None:
                 break
@@ -619,12 +681,19 @@ def run_fleet(
         if nxt > t + iv:
             t = t0 + math.floor((nxt - t0) / iv) * iv
             continue
-        fed.step(t + iv)
+        if obs is not None:
+            t_step = time.perf_counter()
+            fed.step(t + iv)
+            obs.note_window(t, time.perf_counter() - t_step, 0)
+        else:
+            fed.step(t + iv)
         t += iv
         windows += 1
         if chaos is not None:
-            chaos.control(fed, t)
+            _chaos_tick(t)
     fed.finalize_telemetry()
+    if obs is not None:
+        obs.finalize_fleet(fed)
     return FleetStreamResult(result=fed.result(), snapshot=fed.snapshot(),
                              telemetries=fed.telemetries, windows=windows,
-                             fed=fed)
+                             fed=fed, obs=obs)

@@ -170,6 +170,121 @@ class EngineHooks:
         ...
 
 
+#: every hook-surface method a ``MultiHooks`` fans out, including the
+#: gated observability stream (``on_alloc`` / ``on_decision_audit`` /
+#: ``on_window_blocked``) that only fires when some attached hook
+#: actually defines it — see ``SchedulerEngine._rebuild_hook_dispatch``.
+HOOK_METHODS = (
+    "on_submit", "on_start", "on_finish", "on_requeue", "on_tick",
+    "on_preempt", "on_resume", "on_decision",
+    "on_alloc", "on_decision_audit", "on_window_blocked",
+)
+
+
+def _hook_defines(hook, name: str) -> bool:
+    """Does ``hook`` carry a real implementation of ``name``?  Inherited
+    ``EngineHooks`` no-ops don't count; duck-typed partial observers count
+    exactly the methods they define; nested ``MultiHooks`` answer for
+    their children via ``wants``."""
+    wants = getattr(hook, "wants", None)
+    if wants is not None:
+        return bool(wants(name))
+    fn = getattr(hook, name, None)
+    if fn is None or not callable(fn):
+        return False
+    cls_fn = getattr(type(hook), name, None)
+    return cls_fn is not getattr(EngineHooks, name, None) or cls_fn is None
+
+
+class MultiHooks(EngineHooks):
+    """Fan one engine hook stream out to many observers.
+
+    Two jobs beyond simple iteration:
+
+    - **Full-surface forwarding for duck-typed observers**: each child
+      receives exactly the events it defines (inherited ``EngineHooks``
+      no-ops are skipped, partial hook objects work), including the
+      getattr-dispatched lifecycle events (``on_preempt`` /
+      ``on_resume`` / ``on_decision``) and the gated observability stream
+      — a user hook attached through ``service.run_stream`` loses nothing.
+    - **Exception isolation**: a raising observer must never corrupt the
+      schedule mid-window.  Exceptions are caught per child per event,
+      recorded in ``errors`` / ``error_counts``, and dispatch continues
+      with the remaining children.  Engine state is already consistent at
+      every hook call site, so the schedule is unaffected (pinned by
+      ``tests/test_obs.py``).
+    """
+
+    MAX_RECORDED_ERRORS = 100
+
+    def __init__(self, *children):
+        self.children: list = [c for c in children if c is not None]
+        self.errors: list[tuple[str, object, Exception]] = []
+        self.error_counts: dict[str, int] = {}
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        self._dispatch = {
+            name: [getattr(c, name) for c in self.children
+                   if _hook_defines(c, name)]
+            for name in HOOK_METHODS
+        }
+
+    def add(self, child) -> None:
+        if child is not None:
+            self.children.append(child)
+            self._rebuild()
+
+    def wants(self, name: str) -> bool:
+        return bool(self._dispatch.get(name))
+
+    def _fan(self, name: str, args: tuple) -> None:
+        for fn in self._dispatch[name]:
+            try:
+                fn(*args)
+            except Exception as exc:
+                key = f"{name}:{type(exc).__name__}"
+                self.error_counts[key] = self.error_counts.get(key, 0) + 1
+                if len(self.errors) < self.MAX_RECORDED_ERRORS:
+                    self.errors.append((name, getattr(fn, "__self__", fn),
+                                        exc))
+
+    # -- full EngineHooks surface, each forwarding to defining children ----
+    def on_submit(self, job, now):
+        self._fan("on_submit", (job, now))
+
+    def on_start(self, job, now):
+        self._fan("on_start", (job, now))
+
+    def on_finish(self, job, now):
+        self._fan("on_finish", (job, now))
+
+    def on_requeue(self, job, now):
+        self._fan("on_requeue", (job, now))
+
+    def on_tick(self, now, engine):
+        self._fan("on_tick", (now, engine))
+
+    def on_preempt(self, job, now, penalty_s):
+        self._fan("on_preempt", (job, now, penalty_s))
+
+    def on_resume(self, job, now):
+        self._fan("on_resume", (job, now))
+
+    def on_decision(self, jobs, order, now, engine):
+        self._fan("on_decision", (jobs, order, now, engine))
+
+    # -- gated observability stream (repro.obs) ----------------------------
+    def on_alloc(self, job, placement, now, wall_s, path):
+        self._fan("on_alloc", (job, placement, now, wall_s, path))
+
+    def on_decision_audit(self, rec):
+        self._fan("on_decision_audit", (rec,))
+
+    def on_window_blocked(self, now, queued):
+        self._fan("on_window_blocked", (now, queued))
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineSnapshot:
     """O(1) view of engine state for drivers, dashboards, and federation
@@ -334,6 +449,24 @@ class SchedulerEngine:
         # matching the seed's `200 * len(jobs) + 10_000 + 4 * faults` bound
         self._guard = 0
         self._guard_budget = 10_000
+        self._rebuild_hook_dispatch()
+
+    def _rebuild_hook_dispatch(self) -> None:
+        """Precompute which attached hooks define the gated observability
+        stream (``on_alloc`` / ``on_decision_audit``).  Derived from
+        ``hooks``, never pickled — rebuilt here and in ``load_state``.
+        With no such observer both lists are empty and the hot paths take
+        their pre-obs branches untouched (pinned bit-identical)."""
+        self._alloc_obs = [h for h in self.hooks
+                           if _hook_defines(h, "on_alloc")]
+        self._audit_obs = [h for h in self.hooks
+                           if _hook_defines(h, "on_decision_audit")]
+
+    def add_hook(self, hook: EngineHooks) -> None:
+        """Attach an observer after construction (keeps the gated-dispatch
+        lists in sync — prefer this over mutating ``hooks`` directly)."""
+        self.hooks.append(hook)
+        self._rebuild_hook_dispatch()
 
     # ------------------------------------------------------------- ingest ----
     def submit(self, jobs: Iterable[Job]) -> int:
@@ -610,6 +743,36 @@ class SchedulerEngine:
         return max(rt, 1.0)
 
     def _alloc_for(self, job: Job, queue_rest: list[Job]) -> Placement | None:
+        """Placement attempt for one job; with alloc observers attached
+        (``repro.obs``) each *successful* attempt is wall-clock timed and
+        reported with the path that produced it (``milp`` /
+        ``greedy-fallback`` / ``heuristic``, inferred from the solver
+        counters).  Failed attempts are not dispatched — a deep backfill
+        scan makes hundreds per decision, and they are already tallied in
+        the audit record's skip counts; per-attempt hook calls there would
+        dominate the decision latency the observers are meant to measure.
+        With no observers the implementation is called directly — zero
+        overhead when off."""
+        obs = self._alloc_obs
+        if not obs:
+            return self._alloc_impl(job, queue_rest)
+        calls0, fb0 = self.milp_calls, self.milp_fallbacks
+        t0 = time.perf_counter()
+        placement = self._alloc_impl(job, queue_rest)
+        if placement is None:
+            return None
+        wall = time.perf_counter() - t0
+        if self.milp_fallbacks > fb0:
+            path = "greedy-fallback"
+        elif self.milp_calls > calls0:
+            path = "milp"
+        else:
+            path = "heuristic"
+        for h in obs:
+            h.on_alloc(job, placement, self.now, wall, path)
+        return placement
+
+    def _alloc_impl(self, job: Job, queue_rest: list[Job]) -> Placement | None:
         ways = self.cluster.candidate_ways(job)
         if not ways:
             return None
@@ -1112,18 +1275,36 @@ class SchedulerEngine:
         return (self._deg_fcfs_until is not None
                 and self.now < self._deg_fcfs_until)
 
+    def _fire_audit(self, rec: dict) -> None:
+        """Deliver one decision-audit record to the gated observers."""
+        for h in self._audit_obs:
+            h.on_decision_audit(rec)
+
     def _schedule_pass(self) -> None:
         if not self.optimized:
             return self._try_schedule_naive()
         cluster, prioritizer = self.cluster, self.prioritizer
         rank_window = self._rank_window
+        #: with audit observers attached (repro.obs) every decision builds
+        #: one record — rank path, wall-clock, allocator path, skip-reason
+        #: tallies — delivered via one on_decision_audit call; with none
+        #: (`audit` empty, the default) no clock is read and no dict is
+        #: built, keeping the pass bit-identical to the pre-obs engine
+        audit = self._audit_obs
         while self.pending:
             # pending is maintained sorted by (submit_time, job_id): window
             # extraction is a slice, no re-sort
             queue = self.pending[: self.queue_window]
             if not self._any_schedulable(queue):
+                if audit:
+                    for h in self.hooks:
+                        fn = getattr(h, "on_window_blocked", None)
+                        if fn is not None:
+                            fn(self.now, len(queue))
                 return
-            if self._fcfs_degraded():
+            t_rank = time.perf_counter() if audit else 0.0
+            fcfs = self._fcfs_degraded()
+            if fcfs:
                 order = list(range(len(queue)))
             elif rank_window is not None:
                 order = rank_window(queue, cluster, self.now,
@@ -1134,29 +1315,70 @@ class SchedulerEngine:
             if self.hooks:
                 self._fire_decision(queue, order)
             top = queue[order[0]]
+            rec = None
+            if audit:
+                rec = {"now": self.now,
+                       "path": "fcfs-degraded" if fcfs else "policy",
+                       "window": len(queue),
+                       "rank_wall_s": time.perf_counter() - t_rank,
+                       "top_job": top.job_id, "placed": False,
+                       "alloc": "none", "skips": {}, "backfills": 0}
             rest = [queue[i] for i in order[1:1 + self.lookahead_k]]
+            calls0, fb0 = self.milp_calls, self.milp_fallbacks
             placement = self._alloc_for(top, rest)
             if placement is not None:
+                if rec is not None:
+                    rec["placed"] = True
+                    rec["alloc"] = ("greedy-fallback"
+                                    if self.milp_fallbacks > fb0
+                                    else "milp"
+                                    if self.milp_calls > calls0
+                                    else "heuristic")
+                    self._fire_audit(rec)
                 self._remove_pending(top)
                 self._start_job(top, placement)
                 continue
+            if rec is not None:
+                rec["skips"]["head-no-placement"] = 1
             if not self.backfill:
+                if rec is not None:
+                    self._fire_audit(rec)
                 return
-            # EASY backfill under reservation for `top`
+            # EASY backfill under reservation for `top`.  The audit skip
+            # tallies use local ints folded into the record after the loop:
+            # a deep window makes O(queue_window) skips per decision, and
+            # per-skip dict updates would show up in the decision latency
+            # the audit record itself reports.  Candidate placements go
+            # straight to ``_alloc_impl`` for the same reason (identical to
+            # ``_alloc_for`` when no observers are attached) — alloc spans
+            # cover head-of-queue placements; backfill starts are counted
+            # in the record's ``backfills`` field.
             t_res = self._earliest_start(top)
             progressed = False
+            sk_over = sk_nopl = 0
             for i in order[1:]:
                 cand = queue[i]
                 if cand.state != JobState.PENDING or cand is top:
                     continue
                 if self.now + self._est_rt(cand) > t_res:
+                    sk_over += 1
                     continue
-                pl = self._alloc_for(cand, [])
+                pl = self._alloc_impl(cand, [])
                 if pl is not None:
                     self._remove_pending(cand)
                     self._start_job(cand, pl)
                     self.backfills += 1
                     progressed = True
+                    if rec is not None:
+                        rec["backfills"] += 1
+                else:
+                    sk_nopl += 1
+            if rec is not None:
+                if sk_over:
+                    rec["skips"]["backfill-overrun"] = sk_over
+                if sk_nopl:
+                    rec["skips"]["backfill-no-placement"] = sk_nopl
+                self._fire_audit(rec)
             if not progressed:
                 return
             # after backfills the reserved job may now fit; loop again
@@ -1167,7 +1389,8 @@ class SchedulerEngine:
     #: everything a restored engine needs to resume bit-identically.  Hooks
     #: are deliberately absent (observational; the restoring driver re-
     #: attaches its own), as are the derived caches ``_scratch`` /
-    #: ``_pindex`` / ``_rank_window`` (rebuilt on load).
+    #: ``_pindex`` / ``_rank_window`` and the gated hook-dispatch lists
+    #: ``_alloc_obs`` / ``_audit_obs`` (rebuilt on load).
     _STATE_ATTRS = (
         "spec", "prioritizer", "allocator", "backfill", "lookahead_k",
         "fault_model", "straggler_migration", "max_sim_time", "queue_window",
@@ -1231,6 +1454,7 @@ class SchedulerEngine:
         if isinstance(pri, EngineHooks) and getattr(pri, "incremental",
                                                     False):
             eng.hooks.append(pri)
+        eng._rebuild_hook_dispatch()
         return eng
 
     def _try_schedule_naive(self) -> None:

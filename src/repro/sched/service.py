@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Callable
 
 from repro.core.faults import FaultModel
@@ -24,7 +25,7 @@ from repro.core.metrics import BatchResult
 from repro.core.policies import make_policy
 from repro.core.types import ClusterSpec, Job
 from repro.sched.engine import (DEFAULT_QUEUE_WINDOW, EngineHooks,
-                                PolicyPrioritizer, Prioritizer,
+                                MultiHooks, PolicyPrioritizer, Prioritizer,
                                 SchedulerEngine)
 from repro.sched.scenarios import Scenario, ScenarioRun, get_scenario
 from repro.sched.telemetry import RollingTelemetry
@@ -38,6 +39,23 @@ class StreamResult:
     telemetry: RollingTelemetry | None
     windows: int                         # rescan windows processed
     engine: SchedulerEngine
+    obs: object | None = None            # repro.obs.Observability, if armed
+
+
+def _controller_tick(obs, kind: str, now: float, fn):
+    """Run one controller tick; with an ``Observability`` bundle armed,
+    wall-clock the tick and record it as a control-plane span plus
+    tick/action counters.  ``obs=None`` calls ``fn`` directly."""
+    if obs is None:
+        return fn()
+    t0 = time.perf_counter()
+    events = fn()
+    try:
+        n = len(events)
+    except TypeError:
+        n = int(bool(events))
+    obs.note_controller(kind, n, time.perf_counter() - t0, now)
+    return events
 
 
 class SlaLanePrioritizer:
@@ -197,6 +215,7 @@ def run_stream(
     preemption=None,
     chaos=None,
     degradation=None,
+    obs=None,
 ) -> StreamResult:
     """Replay ``jobs`` through a fresh engine in rescan-interval windows.
 
@@ -229,17 +248,33 @@ def run_stream(
     not skipped over.  ``degradation`` (a ``repro.chaos.DegradationPolicy``)
     arms the engine's control-plane degradation ladder.  Both default to
     ``None``: bit-identical to the pre-chaos service (pinned by tests).
+
+    ``obs`` (a ``repro.obs.Observability``) attaches the tracing / metrics /
+    audit sinks and wall-clocks every controller tick into the control-plane
+    trace.  ``obs=None`` leaves the schedule bit-identical (pinned).
+
+    All observers — user ``hooks``, telemetry, obs sinks, and the
+    incremental quota gate — are composed through one ``MultiHooks``, so a
+    duck-typed partial hook object receives exactly the events it defines
+    (the full ``EngineHooks`` surface, ``on_preempt`` / ``on_resume`` /
+    ``on_decision`` / ``on_tick`` included) and a raising observer is
+    isolated instead of corrupting the window mid-schedule.
     """
     if autoscaler is not None:
         # scale-ups append to spec.nodes: give the engine its own copy so a
         # caller-held ScenarioRun/spec can be replayed (e.g. static-vs-
         # autoscaled comparisons) without seeing grown capacity
         spec = ClusterSpec(nodes=list(spec.nodes), name=spec.name)
-    all_hooks = tuple(hooks) + ((telemetry,) if telemetry is not None else ())
+    children = list(hooks)
+    if telemetry is not None:
+        children.append(telemetry)
+    if obs is not None:
+        children.extend(obs.hooks())
     if isinstance(prioritizer, QuotaPrioritizer) and prioritizer.incremental:
         # hook-fed per-VC usage: the engine starts idle, so start from zero
         prioritizer.reset_usage()
-        all_hooks += (prioritizer,)
+        children.append(prioritizer)
+    all_hooks = (MultiHooks(*children),) if children else ()
     engine = SchedulerEngine(
         spec, prioritizer, allocator=allocator, backfill=backfill,
         lookahead_k=lookahead_k, fault_model=fault_model,
@@ -275,7 +310,9 @@ def run_stream(
                 # can unblock them — hop to its window edge and tick
                 t = t0 + math.ceil((chaos.next_time() - t0) / iv) * iv
                 engine.step(t)
-                chaos.control(engine, t, telemetry)
+                _controller_tick(obs, "chaos", t,
+                                 lambda t=t: chaos.control(engine, t,
+                                                           telemetry))
                 continue
             if engine.done or autoscaler is None:
                 break
@@ -285,7 +322,10 @@ def run_stream(
             # (every pool at its max bound) the job is genuinely
             # unplaceable and the stream ends incomplete.
             t += iv
-            acted = autoscaler.control(engine, t, telemetry, stalled=True)
+            acted = _controller_tick(
+                obs, "autoscaler", t,
+                lambda t=t: autoscaler.control(engine, t, telemetry,
+                                               stalled=True))
             if not acted and engine.next_event_time() == math.inf:
                 break
             continue
@@ -300,21 +340,31 @@ def run_stream(
             # window are submitted before any queued event beyond them runs
             t = t0 + math.floor((nxt - t0) / iv) * iv
             continue
-        engine.step(t + iv)
+        t_step = time.perf_counter() if obs is not None else 0.0
+        processed = engine.step(t + iv)
         t += iv
         windows += 1
+        if obs is not None:
+            obs.note_window(t, time.perf_counter() - t_step, processed)
         if chaos is not None:
-            chaos.control(engine, t, telemetry)
+            _controller_tick(obs, "chaos", t,
+                             lambda t=t: chaos.control(engine, t, telemetry))
         if autoscaler is not None:
-            autoscaler.control(engine, t, telemetry)
+            _controller_tick(obs, "autoscaler", t,
+                             lambda t=t: autoscaler.control(engine, t,
+                                                            telemetry))
         if preemption is not None:
-            preemption.control(engine, t, telemetry)
+            _controller_tick(obs, "preemption", t,
+                             lambda t=t: preemption.control(engine, t,
+                                                            telemetry))
         if on_window is not None:
             on_window(engine, t, windows)
     if telemetry is not None:
         telemetry.final(engine)
+    if obs is not None:
+        obs.finalize(engine)
     return StreamResult(batch=engine.result(), telemetry=telemetry,
-                        windows=windows, engine=engine)
+                        windows=windows, engine=engine, obs=obs)
 
 
 def run_scenario(
@@ -334,6 +384,7 @@ def run_scenario(
     preemption=None,
     chaos=None,
     degradation=None,
+    obs=None,
 ) -> StreamResult:
     """Build a registered scenario and stream it through the engine with
     rolling telemetry.  The scenario's SLA population and VC quotas are
@@ -368,4 +419,4 @@ def run_scenario(
         backfill=backfill, fault_model=run.fault_model,
         queue_window=queue_window, telemetry=telemetry, chunked_submit=True,
         autoscaler=autoscaler, preemption=preemption, chaos=chaos,
-        degradation=degradation)
+        degradation=degradation, obs=obs)

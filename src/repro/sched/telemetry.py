@@ -106,6 +106,7 @@ class RollingTelemetry:
         # pre-chaos engines simply read as zero)
         self.chaos_events: list = []
         self.reclaimed_jobs = 0
+        self.milp_calls = 0
         self.milp_fallbacks = 0
         self.degraded_windows = 0
         self.degraded_s = 0.0
@@ -153,6 +154,7 @@ class RollingTelemetry:
         down = getattr(cluster, "node_down", None)
         self._last_nodes_down = 0 if down is None else int((down & mask).sum())
         self.reclaimed_jobs = getattr(engine, "reclaimed_jobs", 0)
+        self.milp_calls = getattr(engine, "milp_calls", 0)
         self.milp_fallbacks = getattr(engine, "milp_fallbacks", 0)
         self.degraded_windows = getattr(engine, "degraded_windows", 0)
         self.degraded_s = getattr(engine, "degraded_s", 0.0)
@@ -273,12 +275,34 @@ class RollingTelemetry:
         return self.degraded_s / 3600.0
 
     def degraded_fraction(self) -> float:
-        """Fraction of the observed span spent FCFS-degraded; 0.0 over an
-        empty or zero-length span (never a ZeroDivisionError)."""
+        """Fraction of the observed span spent FCFS-degraded, clamped to
+        [0.0, 1.0].  Both boundaries are exact: an undegraded run reports
+        0.0, and a run degraded wall-to-wall reports 1.0 — including the
+        zero-length-span corner (a single observed tick inside a degraded
+        window), which used to under-report as 0.0."""
         if self._first_t is None or self._last_t is None:
             return 0.0
         span = self._last_t - self._first_t
-        return min(self.degraded_s / span, 1.0) if span > 0 else 0.0
+        if span <= 0:
+            return 1.0 if self.degraded_s > 0 else 0.0
+        return min(max(self.degraded_s / span, 0.0), 1.0)
+
+    # keep the engine-snapshot spelling available on telemetry too
+    @property
+    def degraded_ratio(self) -> float:
+        """Alias for :meth:`degraded_fraction` matching the snapshot /
+        metrics naming (``repro_degraded_*``)."""
+        return self.degraded_fraction()
+
+    def milp_fallback_rate(self) -> float:
+        """Fraction of solver-eligible allocations that degraded to the
+        greedy path, in [0.0, 1.0] at both boundaries: 0.0 when the solver
+        was never eligible (no calls, no fallbacks) and exactly 1.0 when
+        every eligible allocation fell back."""
+        attempts = self.milp_calls + self.milp_fallbacks
+        if attempts <= 0:
+            return 0.0
+        return min(max(self.milp_fallbacks / attempts, 0.0), 1.0)
 
     def peak_nodes_down(self) -> int:
         return max((s.nodes_down for s in self.samples), default=0)

@@ -153,3 +153,59 @@ def test_jain_index_reference_values():
     assert jain_index([5.0, 5.0, 5.0, 5.0]) == pytest.approx(1.0)
     assert jain_index([1.0, 3.0]) == pytest.approx(16.0 / 20.0)
     assert jain_index([]) == 1.0
+
+
+def test_degraded_ratio_boundaries():
+    """degraded_fraction / degraded_ratio pinned at both boundaries: 0.0
+    with no degradation, exactly 1.0 when the whole observed span (or a
+    zero-length single-tick span) was FCFS-degraded."""
+    tel = RollingTelemetry(window=1e6, sample_interval=math.inf)
+    eng = _FakeEngine()
+    # no ticks at all -> 0.0, never a ZeroDivisionError
+    assert tel.degraded_fraction() == 0.0
+    assert tel.degraded_ratio == 0.0
+
+    _tick(tel, eng, 0.0)
+    _tick(tel, eng, 100.0)
+    assert tel.degraded_fraction() == 0.0
+
+    # 100%-degraded window: degraded_s covers the whole span
+    eng.degraded_s = 100.0
+    _tick(tel, eng, 100.0)
+    assert tel.degraded_fraction() == 1.0
+    # degraded_s overshooting the span (window-bucket rounding) stays clamped
+    eng.degraded_s = 150.0
+    _tick(tel, eng, 100.0)
+    assert tel.degraded_fraction() == 1.0
+
+    # zero-length span (single observed tick) inside a degraded window
+    tel2 = RollingTelemetry(window=1e6, sample_interval=math.inf)
+    eng2 = _FakeEngine()
+    eng2.degraded_s = 30.0
+    _tick(tel2, eng2, 50.0)
+    assert tel2.degraded_fraction() == 1.0
+    # ... and 0.0 when nothing was degraded at that tick
+    tel3 = RollingTelemetry(window=1e6, sample_interval=math.inf)
+    _tick(tel3, _FakeEngine(), 50.0)
+    assert tel3.degraded_fraction() == 0.0
+
+
+def test_milp_fallback_rate_boundaries():
+    """milp_fallback_rate pinned at 0.0 (solver never eligible, or never
+    fell back) and exactly 1.0 (every eligible alloc degraded to greedy)."""
+    tel = RollingTelemetry(window=1e6, sample_interval=math.inf)
+    eng = _FakeEngine()
+    _tick(tel, eng, 0.0)
+    assert tel.milp_fallback_rate() == 0.0     # no calls, no fallbacks
+
+    eng.milp_calls = 7
+    _tick(tel, eng, 10.0)
+    assert tel.milp_fallback_rate() == 0.0     # calls but zero fallbacks
+
+    eng.milp_fallbacks = 7
+    _tick(tel, eng, 20.0)
+    assert tel.milp_fallback_rate() == 0.5
+
+    eng.milp_calls = 0
+    _tick(tel, eng, 30.0)
+    assert tel.milp_fallback_rate() == 1.0     # 100% of eligible allocs fell back

@@ -27,6 +27,30 @@ EVAL_BATCHES = int(os.environ.get("REPRO_BENCH_EVAL_BATCHES",
                                   {"quick": 4, "full": 10}[SCALE]))
 
 
+#: set by ``benchmarks.run --rss`` (or exported directly): benches that
+#: consult ``rss_enabled()`` stamp ``peak_rss_mb`` into every bench point
+RSS_ENV = "REPRO_BENCH_RSS"
+
+
+def rss_enabled() -> bool:
+    return os.environ.get(RSS_ENV, "") not in ("", "0")
+
+
+def peak_rss_mb() -> float | None:
+    """Peak resident set size of this process in MB (None where the
+    ``resource`` module is unavailable, e.g. non-POSIX hosts).  Linux
+    reports ``ru_maxrss`` in KB, macOS in bytes — normalized here so the
+    stamped JSON is comparable across hosts."""
+    try:
+        import resource
+    except ImportError:
+        return None
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform == "darwin":
+        peak /= 1024.0
+    return round(peak / 1024.0, 1)
+
+
 def _git_sha() -> str:
     try:
         out = subprocess.run(

@@ -6,10 +6,11 @@ artifact (e.g. ``BENCH_streaming.json``) that is listed in the run summary
 so cross-PR perf tracking knows where to look.  Module selection:
 ``python -m benchmarks.run [module ...]`` with modules in {latency, kernels,
 roofline, variability, naive, qssf, util, transfer, policies, streaming,
-federation, rl_streaming, autoscaling, preemption, chaos, obs}.
+federation, rl_streaming, autoscaling, preemption, chaos, obs, scale_curve}.
 ``--smoke`` runs every selected module that supports it in its fast CI mode
 (modules whose ``run`` accepts a ``smoke`` kwarg; others run normally).
-REPRO_BENCH_SCALE=full for paper-scale runs.
+``--rss`` stamps peak-RSS (resource.getrusage) into every bench point of
+modules that support it.  REPRO_BENCH_SCALE=full for paper-scale runs.
 """
 from __future__ import annotations
 
@@ -20,13 +21,19 @@ import time
 
 MODULES = ("latency", "kernels", "roofline", "variability", "naive", "qssf",
            "util", "transfer", "policies", "streaming", "federation",
-           "rl_streaming", "autoscaling", "preemption", "chaos", "obs")
+           "rl_streaming", "autoscaling", "preemption", "chaos", "obs",
+           "scale_curve")
 
 
 def main() -> None:
     args = sys.argv[1:]
     smoke = "--smoke" in args
-    want = [a for a in args if a != "--smoke"] or list(MODULES)
+    if "--rss" in args:
+        # env (not a module global) so benches see it regardless of import
+        # order, and standalone `python -m benchmarks.bench_*` matches
+        from benchmarks.common import RSS_ENV
+        os.environ[RSS_ENV] = "1"
+    want = [a for a in args if a not in ("--smoke", "--rss")] or list(MODULES)
     rows: list[str] = []
     artifacts: list[str] = []
     t0 = time.time()

@@ -27,7 +27,10 @@ import numpy as np
 
 from repro.core.agent import PPOAgent
 from repro.core.cluster import ClusterState
-from repro.core.features import MAX_QUEUE_SIZE, build_state
+from repro.core.features import (CV_SIZE, MAX_QUEUE_SIZE, OV_SIZE,
+                                 build_features, build_state,
+                                 critic_features, pad_to_queue,
+                                 sample_features)
 from repro.core.policies import Policy
 from repro.core.types import Job
 
@@ -55,13 +58,20 @@ class RLPrioritizer:
 
     def __init__(self, agent: PPOAgent, *, explore: bool = True,
                  use_estimates: bool = False, raw_features: bool = False,
-                 streaming: bool = False):
+                 streaming: bool = False, deep_scorer=None):
         self.agent = agent
         self.explore = explore
         self.use_estimates = use_estimates
         self.raw_features = raw_features
         self.record = True
         self.stream_stats = StreamStats() if streaming else None
+        #: opt-in deep-window tail scoring (a
+        #: ``repro.kernels.batch_score.BucketedScorer`` over the actor's
+        #: own weights): queue rows beyond the MAX_QUEUE_SIZE actor window
+        #: are ordered by the bucketed fused-MLP logits instead of FIFO.
+        #: ``None`` (default) keeps the FIFO tail — bit-identical to the
+        #: pre-scorer prioritizer, pinned by tests.
+        self.deep_scorer = deep_scorer
 
     def set_mode(self, *, explore: bool | None = None,
                  record: bool | None = None) -> None:
@@ -83,18 +93,43 @@ class RLPrioritizer:
         return self._rank(jobs, cluster, now, fields)
 
     def _rank(self, jobs, cluster, now, fields) -> list[int]:
-        ov, cv, mask = build_state(jobs, cluster, now,
+        n = min(len(jobs), MAX_QUEUE_SIZE)
+        tail_logits = None
+        if self.deep_scorer is not None and len(jobs) > MAX_QUEUE_SIZE:
+            # one FBM pass over the whole window: the head state is built
+            # from the exact rows build_state would produce (same feats ->
+            # same act), and the tail rows are batch-scored through the
+            # shape-bucketed fused-MLP kernel
+            feats = build_features(jobs, cluster, now,
                                    use_estimates=self.use_estimates,
-                                   raw=self.raw_features, fields=fields)
+                                   fields=fields)
+            if self.raw_features:
+                ov_full = feats[:, :OV_SIZE]
+            else:
+                ov_full, _ = sample_features(feats, cluster)
+            mask = np.zeros((MAX_QUEUE_SIZE,), dtype=np.float32)
+            mask[:n] = 1.0
+            ov = pad_to_queue(ov_full, OV_SIZE)
+            cv = pad_to_queue(critic_features(feats), CV_SIZE)
+            tail_logits = self.deep_scorer.score(ov_full[n:])
+        else:
+            ov, cv, mask = build_state(jobs, cluster, now,
+                                       use_estimates=self.use_estimates,
+                                       raw=self.raw_features, fields=fields)
         action, logits = self.agent.act(ov, cv, mask, explore=self.explore,
                                         record=self.explore and self.record)
-        n = min(len(jobs), MAX_QUEUE_SIZE)
         order = list(np.argsort(-logits[:n], kind="stable"))
         if action < n:
             order.remove(action)
             order.insert(0, action)
-        # jobs beyond the fixed-size window keep FIFO order at the tail
-        order += list(range(n, len(jobs)))
+        if tail_logits is not None:
+            # deep-window mode: tail ordered by the bucketed scorer
+            # (stable argsort keeps FIFO among exact ties)
+            order += [int(n + i)
+                      for i in np.argsort(-tail_logits, kind="stable")]
+        else:
+            # jobs beyond the fixed-size window keep FIFO order at the tail
+            order += list(range(n, len(jobs)))
         return order
 
     def observe_finish(self, job: Job) -> None:

@@ -25,10 +25,29 @@ ordering is preserved exactly, so the solver sees the same problem as the
 per-call builder (retained as ``_solve_milp_reference`` for the
 differential equivalence test); construction cost drops ~2x and the full
 solve ~15-20% on helios-sized clusters with K=8 look-ahead.
+
+Skeletons are held per *thread* (``_SKELETONS`` is a ``threading.local``
+store with a dict surface): parallel federation stepping solves MILPs from
+worker threads concurrently, and the skeleton arrays are filled in place
+per solve, so sharing one across threads would race.
+
+Solution cache
+--------------
+``choose_allocation`` additionally memoizes the full result per
+``(job shape, candidate ways, look-ahead shapes, use_solver)`` key at the
+current ``(cluster.version, cluster.topo_version)``.  Everything the solve
+reads — free resources, eligibility masks, the ways themselves — is a pure
+function of shape and version, so a hit is exact; any cluster mutation
+bumps the version and drops the whole cache (see
+``tests/test_milp.py::test_solution_cache_invalidation``).  Within one
+rescan window over a deep queue, repeated job shapes then skip the solver
+entirely; ``solution_cache=False`` restores the uncached reference path
+(differential-pinned).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -38,7 +57,7 @@ try:  # pragma: no cover - import guard
 except Exception:  # pragma: no cover
     _HAVE_SCIPY = False
 
-from repro.core.cluster import ClusterState, Placement
+from repro.core.cluster import ClusterState, Placement, _job_shape
 from repro.core.types import Job
 
 
@@ -74,10 +93,16 @@ def choose_allocation(
     *,
     lookahead_k: int = 8,
     use_solver: bool = True,
+    solution_cache: bool = True,
 ) -> MILPResult:
     """Pick the best of `ways` for `job` under multi-resource + look-ahead MILP.
 
     `ways` must be non-empty feasible placements (way1=spread first, way2=pack).
+
+    With ``solution_cache`` (default) the result is memoized on the cluster
+    instance keyed by (job shape, ways, look-ahead shapes) at the current
+    cluster version — exact, since every input the solve reads is a pure
+    function of those; any mutation bumps the version and invalidates.
     """
     assert ways, "choose_allocation requires at least one candidate way"
     if len(ways) == 1:
@@ -85,11 +110,31 @@ def choose_allocation(
     ways = ways[:2]  # Algorithm 1 is binary: way1 vs way2
     lookahead = (lookahead or [])[:lookahead_k]
 
+    cache = key = None
+    if solution_cache:
+        ver = (cluster.version, cluster.topo_version)
+        store = getattr(cluster, "_milp_sol_cache", None)
+        if store is None or store[0] != ver:
+            store = (ver, {})
+            cluster._milp_sol_cache = store
+        cache = store[1]
+        key = (_job_shape(job),
+               tuple(tuple(sorted(w.items())) for w in ways),
+               tuple(_job_shape(lj) for lj in lookahead),
+               use_solver)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+
     if use_solver and _HAVE_SCIPY:
         res = _solve_milp(cluster, job, ways, lookahead)
-        if res is not None:
-            return res
-    return _greedy_choice(cluster, job, ways, lookahead)
+    else:
+        res = None
+    if res is None:
+        res = _greedy_choice(cluster, job, ways, lookahead)
+    if cache is not None:
+        cache[key] = res
+    return res
 
 
 # ---------------------------------------------------------------------- solver ---
@@ -149,7 +194,27 @@ class _Skeleton:
         self.c[1:1 + self.n_cjo] = -1.0
 
 
-_SKELETONS: dict[tuple[int, int, int], _Skeleton] = {}
+class _SkeletonStore(threading.local):
+    """Per-thread skeleton memo with a dict surface.  Skeleton arrays are
+    filled in place on every solve, so a store shared across the parallel
+    federation's worker threads would race; ``threading.local`` gives each
+    thread its own dict (built lazily on first access) while ``len`` /
+    ``get`` / item assignment keep working for existing callers."""
+
+    def __init__(self):
+        self.d: dict[tuple[int, int, int], _Skeleton] = {}
+
+    def __len__(self) -> int:
+        return len(self.d)
+
+    def get(self, key):
+        return self.d.get(key)
+
+    def __setitem__(self, key, sk) -> None:
+        self.d[key] = sk
+
+
+_SKELETONS = _SkeletonStore()
 
 
 def _skeleton(n_nodes: int, gpn: int, K: int) -> _Skeleton:

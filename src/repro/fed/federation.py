@@ -36,7 +36,9 @@ import dataclasses
 import heapq
 import itertools
 import math
+import os
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Iterable, Sequence
 
 import numpy as np
@@ -140,6 +142,7 @@ class FederatedScheduler:
         autoscalers: Sequence | None = None,
         migration=None,
         obs=None,
+        parallel: bool = False,
     ):
         if not clusters:
             raise ValueError("a federation needs at least one cluster")
@@ -216,6 +219,14 @@ class FederatedScheduler:
         self._defer_seq = itertools.count()
         self.deferrals = 0                      # total defer decisions
         self.chaos_actions: list = []           # fleet ChaosActions applied
+        #: opt-in threaded member stepping (see ``_step_members``): engines
+        #: share no mutable state between window edges, so stepping them
+        #: concurrently and summing in member order is decision-for-decision
+        #: identical to the serial loop (pinned by differential tests).
+        #: Forced serial under ``obs`` — member bundles count on the shared
+        #: fleet registry, whose counters are not thread-safe.
+        self.parallel = bool(parallel)
+        self._pool: ThreadPoolExecutor | None = None
 
     # ------------------------------------------------------------- ingest ----
     def _routing_views(self) -> list[ClusterView]:
@@ -342,13 +353,41 @@ class FederatedScheduler:
         )
 
     # ----------------------------------------------------------- stepping ----
+    def _step_members(self, until: float) -> int:
+        """Step every member engine to ``until`` and return the summed
+        event-batch count.  With ``parallel=True`` the per-member calls run
+        in a lazily created thread pool: members are fully independent
+        between window edges (routing, control, migration, and view
+        refreshes all happen serially *after* this barrier), so the only
+        shared state inside a step is each engine's own.  The pool's
+        ``map`` preserves member order, and integer summation is
+        order-insensitive anyway — outputs are bit-identical to the serial
+        loop.  Wall-clock wins depend on members releasing the GIL (numpy
+        percentile/sort paths do) and scale with member count, not jobs."""
+        engines = self.engines
+        if not self.parallel or len(engines) < 2 or self.obs is not None:
+            return sum(e.step(until) for e in engines)
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=min(len(engines), os.cpu_count() or 1),
+                thread_name_prefix="fed-step")
+        return sum(self._pool.map(lambda e: e.step(until), engines))
+
+    def close(self) -> None:
+        """Release the stepping thread pool (no-op for serial federations).
+        Safe to call repeatedly; the pool is re-created on the next
+        parallel step if the federation keeps running."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
     def step(self, until: float = math.inf) -> int:
         """Advance every engine in lockstep to ``until`` (one rescan
         window); returns total event batches processed.  Per-member
         autoscalers get their control tick at the window edge, *before* the
         view refresh — routers see scaled capacity through the refreshed
         snapshots immediately."""
-        processed = sum(e.step(until) for e in self.engines)
+        processed = self._step_members(until)
         if until != math.inf:
             self._control(until)
         self._refresh_views()
@@ -579,6 +618,7 @@ def run_fleet(
     migration=None,
     chaos=None,
     obs=None,
+    parallel: bool = False,
 ) -> FleetStreamResult:
     """Replay a fleet scenario (or a prebuilt ``FleetRun``) through a fresh
     federation in lockstep rescan windows: each window's arrivals are routed
@@ -606,7 +646,12 @@ def run_fleet(
     engine gets its own child tracer/metrics/audit hooks (distinct trace
     pids), control-plane ticks are timed, and the bundle is finalized
     before the result is returned.  ``obs=None`` keeps the run bit-identical
-    to an unobserved fleet."""
+    to an unobserved fleet.
+
+    ``parallel=True`` steps member engines through a thread pool inside
+    every lockstep window (outputs pinned bit-identical to the serial
+    path, see ``FederatedScheduler._step_members``); the pool is released
+    before the result is returned."""
     if isinstance(run, str):
         run = get_fleet_scenario(run).build(num_jobs, seed)
     run_chaos = getattr(run, "chaos", None)
@@ -628,7 +673,8 @@ def run_fleet(
         fault_models=run.fault_models, queue_window=queue_window,
         telemetry_window=telemetry_window, sample_interval=sample_interval,
         router_seed=router_seed, optimized=optimized,
-        autoscalers=autoscalers, migration=migration, obs=obs)
+        autoscalers=autoscalers, migration=migration, obs=obs,
+        parallel=parallel)
 
     def _chaos_tick(now):
         if obs is None:
@@ -692,6 +738,7 @@ def run_fleet(
         if chaos is not None:
             _chaos_tick(t)
     fed.finalize_telemetry()
+    fed.close()
     if obs is not None:
         obs.finalize_fleet(fed)
     return FleetStreamResult(result=fed.result(), snapshot=fed.snapshot(),

@@ -1,0 +1,82 @@
+"""Shape-bucketed JIT batch scoring over the fused policy-MLP kernel.
+
+Deep queue windows (qw >> MAX_QUEUE_SIZE=256) leave the actor blind to the
+tail: ``RLPrioritizer`` ranks the first 256 jobs and keeps everything beyond
+in FIFO order.  ``BucketedScorer`` scores arbitrary-length feature batches
+through the same fused Pallas MLP (``kernels/policy_mlp.py``) so the tail
+can be ordered by the policy too — the batch is padded up to a power-of-two
+bucket, so ``jax.jit`` compiles once per bucket (log2 many shapes across a
+whole run) instead of once per distinct queue depth.  Batches beyond the
+largest bucket are scored in bucket-size chunks.
+
+Off-TPU the kernel auto-selects interpret mode (same convention as
+``kernels.ops``), which keeps the path importable and correct anywhere the
+jax toolchain exists; the MXU win only materializes on real hardware.  The
+scorer is opt-in end to end — nothing routes through it unless a caller
+passes one to ``RLPrioritizer(deep_scorer=...)``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: bucket ladder bounds: smallest bucket matches the actor window, largest
+#: caps compile count (and VMEM footprint) at 16k-deep benches
+MIN_BUCKET = 256
+MAX_BUCKET = 16384
+
+
+def bucket_for(n: int, *, lo: int = MIN_BUCKET, hi: int = MAX_BUCKET) -> int:
+    """Smallest power-of-two bucket >= n, clamped to [lo, hi]."""
+    b = lo
+    while b < n and b < hi:
+        b <<= 1
+    return b
+
+
+class BucketedScorer:
+    """Batch-score (n, F) feature rows with the fused policy MLP.
+
+    ``params`` is the actor parameter list (``agent.params["actor"]``:
+    three ``{"w", "b"}`` layers).  ``score`` pads the batch to its bucket,
+    runs the Pallas kernel once per chunk, and returns the real rows'
+    logits as float32 numpy.  ``compiled_buckets`` exposes which bucket
+    shapes have been traced — tests pin that repeated nearby sizes reuse
+    one compilation.
+    """
+
+    def __init__(self, params: list[dict], *, interpret: bool | None = None,
+                 max_bucket: int = MAX_BUCKET):
+        self.params = params
+        self.interpret = interpret
+        self.max_bucket = int(max_bucket)
+        self._buckets: set[int] = set()
+
+    @property
+    def compiled_buckets(self) -> tuple[int, ...]:
+        return tuple(sorted(self._buckets))
+
+    def _score_bucket(self, x_pad: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        from repro.kernels import ops
+        self._buckets.add(x_pad.shape[0])
+        out = ops.policy_mlp(x_pad, self.params, mask,
+                             interpret=self.interpret)
+        return np.asarray(out, dtype=np.float32)
+
+    def score(self, feats: np.ndarray) -> np.ndarray:
+        """(n, F) float32 rows -> (n,) float32 logits (masked rows never
+        leak: padding is scored at -1e9 and sliced away)."""
+        feats = np.asarray(feats, dtype=np.float32)
+        n = feats.shape[0]
+        if n == 0:
+            return np.zeros((0,), dtype=np.float32)
+        out = np.empty((n,), dtype=np.float32)
+        for lo in range(0, n, self.max_bucket):
+            chunk = feats[lo:lo + self.max_bucket]
+            m = chunk.shape[0]
+            b = bucket_for(m, hi=self.max_bucket)
+            x_pad = np.zeros((b, feats.shape[1]), dtype=np.float32)
+            x_pad[:m] = chunk
+            mask = np.zeros((b,), dtype=np.float32)
+            mask[:m] = 1.0
+            out[lo:lo + m] = self._score_bucket(x_pad, mask)[:m]
+        return out

@@ -59,11 +59,12 @@ import itertools
 import math
 import pickle
 import time
+from collections import deque
 from typing import Iterable
 
 import numpy as np
 
-from repro.core.cluster import ClusterState, Placement
+from repro.core.cluster import ClusterState, Placement, _job_shape
 from repro.core.faults import FaultInjector, FaultModel
 from repro.core.metrics import BatchResult
 from repro.core.milp import choose_allocation
@@ -89,9 +90,16 @@ class _PendingFieldIndex:
     the O(window) Python work they replace); the ranking window is then a
     free O(1) slice view per field, so batch scoring never re-gathers job
     attributes.  Integer-valued fields (``num_gpus``, ``user``, ``vc``)
-    are stored as float64 — exact for any realistic value (< 2**53)."""
+    are stored as float64 — exact for any realistic value (< 2**53).
 
-    __slots__ = ("n", "_cap", "_st", "_rt", "_est", "_gpus", "_user", "_vc")
+    ``_sid`` carries a small-int **shape id** per job (interned
+    ``_job_shape`` key): placement feasibility is a pure function of
+    (shape, cluster version), so the deep-backfill scan can skip a
+    shape it already saw fail at the current version without touching
+    the job object at all."""
+
+    __slots__ = ("n", "_cap", "_st", "_rt", "_est", "_gpus", "_user", "_vc",
+                 "_sid", "shape_ids")
 
     def __init__(self, cap: int = 256):
         self.n = 0
@@ -102,10 +110,20 @@ class _PendingFieldIndex:
         self._gpus = np.empty(cap, dtype=np.float64)
         self._user = np.empty(cap, dtype=np.float64)
         self._vc = np.empty(cap, dtype=np.float64)
+        self._sid = np.empty(cap, dtype=np.float64)
+        self.shape_ids: dict[tuple, int] = {}
 
     def _arrays(self):
         return (self._st, self._rt, self._est, self._gpus, self._user,
-                self._vc)
+                self._vc, self._sid)
+
+    def _shape_id(self, job: Job) -> int:
+        key = _job_shape(job)
+        sid = self.shape_ids.get(key)
+        if sid is None:
+            sid = len(self.shape_ids)
+            self.shape_ids[key] = sid
+        return sid
 
     def insert(self, idx: int, job: Job) -> None:
         n = self.n
@@ -117,10 +135,11 @@ class _PendingFieldIndex:
                 g[:n] = a[:n]
                 grown.append(g)
             (self._st, self._rt, self._est, self._gpus, self._user,
-             self._vc) = grown
+             self._vc, self._sid) = grown
         for a, v in zip(self._arrays(),
                         (job.submit_time, job.runtime, job.est_runtime,
-                         job.num_gpus, job.user, job.vc)):
+                         job.num_gpus, job.user, job.vc,
+                         self._shape_id(job))):
             a[idx + 1:n + 1] = a[idx:n]
             a[idx] = v
         self.n = n + 1
@@ -377,6 +396,10 @@ class SchedulerEngine:
         hooks: Iterable[EngineHooks] = (),
         optimized: bool = True,
         degradation=None,                  # duck-typed DegradationPolicy
+        completed_summary: bool = False,
+        completed_keep: int = 1024,
+        deep_lookahead_k: int | None = None,
+        deep_queue_threshold: int = 4096,
     ):
         self.spec = spec
         self.prioritizer = prioritizer
@@ -412,6 +435,25 @@ class SchedulerEngine:
         self._finish_index: list[tuple[float, int]] = []
         self.remaining: dict[int, float] = {}
         self.completed: list[Job] = []
+        #: opt-in compact completion accounting for million-job streams:
+        #: with ``completed_summary=True`` finished Job objects are NOT
+        #: retained — ``completed`` stays empty, a bounded tuple ring
+        #: (``completed_ring``) keeps the most recent ``completed_keep``
+        #: finishes as ``(job_id, submit, start, finish, num_gpus, vc)``
+        #: tuples, and running aggregates (``completed_stats()``) replace
+        #: the per-job list.  Default (False) is pinned bit-identical.
+        self.completed_summary = completed_summary
+        self.completed_count = 0
+        self.completed_ring = deque(maxlen=max(int(completed_keep), 1))
+        self._sum_jct = 0.0
+        self._sum_wait = 0.0
+        self._max_finish = -math.inf
+        #: opt-in deep-queue lookahead shrink: when the pending queue is
+        #: deeper than ``deep_queue_threshold``, MILP lookahead is cut to
+        #: ``deep_lookahead_k`` jobs (a smaller model per solve).  The
+        #: default (None) never changes the lookahead — pinned.
+        self.deep_lookahead_k = deep_lookahead_k
+        self.deep_queue_threshold = deep_queue_threshold
         self.gpu_seconds = 0.0
         self.decisions = 0
         self.milp_calls = 0
@@ -445,6 +487,14 @@ class SchedulerEngine:
         self._scratch: ClusterState | None = None   # _earliest_start reuse
         self._pindex = _PendingFieldIndex() if optimized else None
         self._rank_window = getattr(prioritizer, "rank_window", None)
+        #: version-keyed negative placement memo for the backfill scan:
+        #: shape ids proven unplaceable at ``_neg_ver`` (== cluster.version).
+        #: Feasibility is a pure function of (shape, version) — see
+        #: ``repro.core.cluster.candidate_ways`` — so a hit is exact, and
+        #: any allocation bumps the version, auto-invalidating the set.
+        #: Derived cache: rebuilt empty on load_state (always safe).
+        self._neg_shapes: set[int] = set()
+        self._neg_ver = -1
         # runaway guard: budget grows with submissions / injected faults,
         # matching the seed's `200 * len(jobs) + 10_000 + 4 * faults` bound
         self._guard = 0
@@ -507,8 +557,10 @@ class SchedulerEngine:
     # ------------------------------------------------------------ queries ----
     @property
     def done(self) -> bool:
-        """All submitted jobs have completed."""
-        return len(self.completed) >= self.submitted
+        """All submitted jobs have completed.  ``completed_count`` equals
+        ``len(self.completed)`` whenever ``completed_summary`` is off, and
+        keeps counting when the compact mode drops the Job objects."""
+        return self.completed_count >= self.submitted
 
     def next_event_time(self) -> float:
         return self._events[0][0] if self._events else math.inf
@@ -519,7 +571,7 @@ class SchedulerEngine:
         return EngineSnapshot(
             now=self.now, submitted=self.submitted,
             num_pending=len(self.pending), num_running=len(self.running),
-            num_completed=len(self.completed),
+            num_completed=self.completed_count,
             free_gpus=free_up,
             utilization=self.cluster.utilization(up_only=True),
             fragmentation=self.cluster.fragmentation(up_only=True),
@@ -585,7 +637,7 @@ class SchedulerEngine:
                 raise RuntimeError(
                     f"scheduler engine stuck: processed {self._guard} event "
                     f"batches against a budget of {self._guard_budget} "
-                    f"({self.submitted} submitted, {len(self.completed)} "
+                    f"({self.submitted} submitted, {self.completed_count} "
                     f"completed)")
             now, _, kind, payload = heapq.heappop(self._events)
             self.now = now
@@ -678,10 +730,17 @@ class SchedulerEngine:
 
     # ------------------------------------------------------------- result ----
     def result(self) -> BatchResult:
-        """Aggregate metrics over everything completed so far."""
+        """Aggregate metrics over everything completed so far.  In
+        ``completed_summary`` mode ``jobs`` is empty (the engine dropped
+        the Job objects); the makespan comes from the tracked max finish
+        and per-job statistics from :meth:`completed_stats`."""
         t0 = self.t0 if self.t0 is not None else 0.0
-        makespan = max((j.finish_time for j in self.completed),
-                       default=self.now) - t0
+        if self.completed_summary:
+            top = self._max_finish if self.completed_count else self.now
+            makespan = top - t0
+        else:
+            makespan = max((j.finish_time for j in self.completed),
+                           default=self.now) - t0
         capacity = self.spec.total_gpus * max(makespan, 1e-9)
         return BatchResult(
             jobs=self.completed, makespan=makespan,
@@ -690,6 +749,27 @@ class SchedulerEngine:
             milp_calls=self.milp_calls, backfills=self.backfills,
             restarts=self.restarts,
         )
+
+    def completed_stats(self) -> dict:
+        """Running completion aggregates — O(1) memory in any mode.  In
+        default mode they are derived from the retained ``completed`` list;
+        in ``completed_summary`` mode from the running sums, so both modes
+        report identical values for the same schedule."""
+        if self.completed_summary:
+            n, s_jct, s_wait = (self.completed_count, self._sum_jct,
+                                self._sum_wait)
+        else:
+            n = len(self.completed)
+            s_jct = sum(j.finish_time - j.submit_time for j in self.completed)
+            s_wait = sum(j.first_start_time - j.submit_time
+                         for j in self.completed)
+        return {
+            "completed": n,
+            "mean_jct_s": s_jct / n if n else 0.0,
+            "mean_wait_s": s_wait / n if n else 0.0,
+            "gpu_seconds": self.gpu_seconds,
+            "ring_len": len(self.completed_ring),
+        }
 
     # --------------------------------------------------------- event logic ----
     def _effective_speed(self, placement: Placement) -> float:
@@ -1138,7 +1218,20 @@ class SchedulerEngine:
         job.finish_time = self.now
         transition(job, JobState.COMPLETED)
         self.gpu_seconds += job.num_gpus * (self.now - job.start_time)
-        self.completed.append(job)
+        self.completed_count += 1
+        if self.completed_summary:
+            # compact mode: running aggregates + bounded tuple ring keep
+            # memory O(completed_keep) on million-job streams
+            self._sum_jct += job.finish_time - job.submit_time
+            self._sum_wait += job.first_start_time - job.submit_time
+            if job.finish_time > self._max_finish:
+                self._max_finish = job.finish_time
+            self.completed_ring.append(
+                (job.job_id, job.submit_time, job.first_start_time,
+                 job.finish_time, job.num_gpus, job.vc))
+            self.remaining.pop(jid, None)
+        else:
+            self.completed.append(job)
         self.prioritizer.observe_finish(job)
         for h in self.hooks:
             h.on_finish(job, self.now)
@@ -1196,6 +1289,25 @@ class SchedulerEngine:
             return False
         can = cluster.can_schedule_now
         for j in queue:
+            avail = free_any if j.gpu_type == "any" \
+                else free_by_type.get(j.gpu_type, 0)
+            if avail >= j.num_gpus and can(j):
+                return True
+        return False
+
+    def _any_schedulable_window(self, bound: int) -> bool:
+        """``_any_schedulable`` over the first ``bound`` pending jobs
+        *without* materializing the window slice — blocked passes on deep
+        queues (the common case under saturation) pay a bounded scan over
+        the already-sorted pending list and nothing else."""
+        cluster = self.cluster
+        free_any, free_by_type = cluster.free_gpu_tallies()
+        if free_any == 0:
+            return False
+        can = cluster.can_schedule_now
+        pending = self.pending
+        for k in range(min(bound, len(pending))):
+            j = pending[k]
             avail = free_any if j.gpu_type == "any" \
                 else free_by_type.get(j.gpu_type, 0)
             if avail >= j.num_gpus and can(j):
@@ -1292,16 +1404,20 @@ class SchedulerEngine:
         #: built, keeping the pass bit-identical to the pre-obs engine
         audit = self._audit_obs
         while self.pending:
-            # pending is maintained sorted by (submit_time, job_id): window
-            # extraction is a slice, no re-sort
-            queue = self.pending[: self.queue_window]
-            if not self._any_schedulable(queue):
+            # schedulability is checked straight off the sorted pending
+            # list; the O(window) slice is deferred until something can
+            # actually start, so blocked passes on deep queues are cheap
+            if not self._any_schedulable_window(self.queue_window):
                 if audit:
+                    queued = min(self.queue_window, len(self.pending))
                     for h in self.hooks:
                         fn = getattr(h, "on_window_blocked", None)
                         if fn is not None:
-                            fn(self.now, len(queue))
+                            fn(self.now, queued)
                 return
+            # pending is maintained sorted by (submit_time, job_id): window
+            # extraction is a slice, no re-sort
+            queue = self.pending[: self.queue_window]
             t_rank = time.perf_counter() if audit else 0.0
             fcfs = self._fcfs_degraded()
             if fcfs:
@@ -1323,7 +1439,11 @@ class SchedulerEngine:
                        "rank_wall_s": time.perf_counter() - t_rank,
                        "top_job": top.job_id, "placed": False,
                        "alloc": "none", "skips": {}, "backfills": 0}
-            rest = [queue[i] for i in order[1:1 + self.lookahead_k]]
+            k_look = self.lookahead_k
+            if (self.deep_lookahead_k is not None
+                    and len(self.pending) > self.deep_queue_threshold):
+                k_look = min(k_look, self.deep_lookahead_k)
+            rest = [queue[i] for i in order[1:1 + k_look]]
             calls0, fb0 = self.milp_calls, self.milp_fallbacks
             placement = self._alloc_for(top, rest)
             if placement is not None:
@@ -1355,13 +1475,49 @@ class SchedulerEngine:
             # in the record's ``backfills`` field.
             t_res = self._earliest_start(top)
             progressed = False
-            sk_over = sk_nopl = 0
-            for i in order[1:]:
+            # Vectorized candidate filter over the pending-index columns.
+            # The pindex still mirrors `queue` row-for-row (nothing was
+            # removed since the slice — the head alloc just failed), so the
+            # scalar reference's per-candidate test
+            # ``now + max(rt, 1.0) > t_res`` is evaluated for the whole
+            # window in one float64 expression with identical operations.
+            # Every entry of order[1:] is a distinct PENDING job != top at
+            # this instant (pending holds only PENDING jobs and order is a
+            # permutation), so tallying overruns off the raw mask matches
+            # the scalar loop's count exactly.
+            pindex = self._pindex
+            w = len(queue)
+            rt_col = pindex._est if prioritizer.use_estimates else pindex._rt
+            time_ok = self.now + np.maximum(rt_col[:w], 1.0) <= t_res
+            sid_snap = pindex._sid[:w].copy()   # survives removals below
+            order_arr = np.asarray(order[1:], dtype=np.intp)
+            ok = time_ok[order_arr]
+            sk_over = int(ok.size) - int(ok.sum())
+            neg = self._neg_shapes
+            if cluster.version != self._neg_ver:
+                self._neg_ver = cluster.version
+                neg.clear()
+            free_any, free_by_type = cluster.free_gpu_tallies()
+            sk_nopl = 0
+            for i in order_arr[ok]:
                 cand = queue[i]
                 if cand.state != JobState.PENDING or cand is top:
+                    continue   # unreachable by the invariant above; kept
+                sid = sid_snap[i]
+                if sid in neg:
+                    # shape already proven unplaceable at this cluster
+                    # version — same None `_alloc_impl` would return
+                    sk_nopl += 1
                     continue
-                if self.now + self._est_rt(cand) > t_res:
-                    sk_over += 1
+                # free-tally prefilter: a per-SKU shortfall is a proof of
+                # infeasibility (the same necessary condition
+                # `_any_schedulable` uses), so `_alloc_impl` would return
+                # None — skip the candidate-ways probe entirely
+                avail = free_any if cand.gpu_type == "any" \
+                    else free_by_type.get(cand.gpu_type, 0)
+                if avail < cand.num_gpus:
+                    neg.add(sid)
+                    sk_nopl += 1
                     continue
                 pl = self._alloc_impl(cand, [])
                 if pl is not None:
@@ -1371,7 +1527,12 @@ class SchedulerEngine:
                     progressed = True
                     if rec is not None:
                         rec["backfills"] += 1
+                    # the allocation bumped cluster.version: start fresh
+                    self._neg_ver = cluster.version
+                    neg.clear()
+                    free_any, free_by_type = cluster.free_gpu_tallies()
                 else:
+                    neg.add(sid)
                     sk_nopl += 1
             if rec is not None:
                 if sk_over:
@@ -1402,6 +1563,9 @@ class SchedulerEngine:
         "reclaimed_jobs", "milp_fallbacks", "degraded_windows", "degraded_s",
         "_deg_fallback_open", "_deg_slow_streak", "_deg_window_start",
         "_deg_window_wall", "_deg_fcfs_until",
+        "completed_summary", "completed_count", "completed_ring",
+        "_sum_jct", "_sum_wait", "_max_finish",
+        "deep_lookahead_k", "deep_queue_threshold",
     )
 
     def save_state(self) -> bytes:
@@ -1448,6 +1612,8 @@ class SchedulerEngine:
         else:
             eng._pindex = None
         eng._rank_window = getattr(eng.prioritizer, "rank_window", None)
+        eng._neg_shapes = set()
+        eng._neg_ver = -1
         pri = eng.prioritizer
         if hasattr(pri, "engine"):
             pri.engine = eng

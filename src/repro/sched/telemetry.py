@@ -11,6 +11,16 @@ emitted every ``sample_interval`` seconds of *simulated* time.
 Utilization is integrated exactly between event batches (busy-GPU fraction
 is piecewise-constant in a discrete-event simulation), so the timeline is
 not subject to sampling aliasing.
+
+Storage is numpy ring buffers (``_Ring``): the engine clock is monotone, so
+every per-event record appends at the tail in nondecreasing time order and
+window eviction is one ``searchsorted`` head advance instead of a Python
+pop loop — ``on_tick`` is O(1) amortized at million-event streams.  Sample
+computation reads contiguous column views: one multi-q ``np.percentile``
+per metric, sequential-``cumsum`` utilization integration, and a
+``bincount`` per-VC share accumulation — each arithmetically identical
+(same float64 operations in the same order) to the scalar loops they
+replaced, pinned by ``tests/test_telemetry.py``.
 """
 from __future__ import annotations
 
@@ -21,9 +31,76 @@ import numpy as np
 
 from repro.core.types import Job
 
-# (finish_time, jct, wait, vc, gpu_seconds) per finished job, kept in a
-# deque and evicted once older than the rolling window
+# (finish_time, jct, wait, vc, gpu_seconds) per finished job — the record
+# view `_FinRing` yields when iterated
 _FinRec = collections.namedtuple("_FinRec", "t jct wait vc gpu_seconds")
+
+
+class _Ring:
+    """Append-only numpy ring with head eviction over parallel columns.
+
+    All columns share one live region ``[head:tail)``.  Appends write at
+    the tail; eviction advances the head by one ``searchsorted`` over a
+    time column (append order is nondecreasing in time — the engine clock
+    is monotone).  On overflow the buffer compacts in place when at least
+    half is dead, else doubles — O(1) amortized per append."""
+
+    __slots__ = ("cols", "head", "tail", "_cap")
+
+    def __init__(self, ncols: int, cap: int = 512):
+        self._cap = cap
+        self.cols = [np.empty(cap, dtype=np.float64) for _ in range(ncols)]
+        self.head = 0
+        self.tail = 0
+
+    def __len__(self) -> int:
+        return self.tail - self.head
+
+    def append(self, *vals: float) -> None:
+        if self.tail == self._cap:
+            n = self.tail - self.head
+            if self.head > self._cap // 2:
+                for a in self.cols:
+                    a[:n] = a[self.head:self.tail]
+            else:
+                self._cap *= 2
+                for i, a in enumerate(self.cols):
+                    g = np.empty(self._cap, dtype=np.float64)
+                    g[:n] = a[self.head:self.tail]
+                    self.cols[i] = g
+            self.head, self.tail = 0, n
+        t = self.tail
+        for a, v in zip(self.cols, vals):
+            a[t] = v
+        self.tail = t + 1
+
+    def view(self, col: int) -> np.ndarray:
+        return self.cols[col][self.head:self.tail]
+
+    def evict_lt(self, col: int, lo: float) -> None:
+        """Drop leading rows with ``cols[col] < lo`` (deque ``popleft``
+        while-first-older semantics, vectorized)."""
+        a = self.cols[col]
+        self.head += int(np.searchsorted(a[self.head:self.tail], lo,
+                                         side="left"))
+
+    def evict_le(self, col: int, lo: float) -> None:
+        """Drop leading rows with ``cols[col] <= lo``."""
+        a = self.cols[col]
+        self.head += int(np.searchsorted(a[self.head:self.tail], lo,
+                                         side="right"))
+
+
+class _FinRing(_Ring):
+    """Finished-job ring (t, jct, wait, vc, gpu_seconds) that iterates as
+    ``_FinRec`` records for observers/tests that walk it."""
+
+    def __init__(self):
+        super().__init__(5)
+
+    def __iter__(self):
+        for i in range(self.head, self.tail):
+            yield _FinRec(*(a[i] for a in self.cols))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,12 +149,11 @@ class RollingTelemetry:
         self.window = window
         self.sample_interval = sample_interval
         self.samples: list[TelemetrySample] = []
-        self._fin: collections.deque[_FinRec] = collections.deque()
-        self._requeues: collections.deque[float] = collections.deque()
+        self._fin = _FinRing()
+        self._requeues = _Ring(1)
         # exact utilization integral: busy fraction is piecewise constant
-        # between event batches; (t, busy_frac) segments within the window
-        self._segments: collections.deque[tuple[float, float, float]] = \
-            collections.deque()  # (t_start, t_end, busy_frac)
+        # between event batches; (t_start, t_end, busy_frac) segments
+        self._segments = _Ring(3)
         self._last_t: float | None = None
         self._first_t: float | None = None
         self._last_busy: float = 0.0
@@ -100,7 +176,7 @@ class RollingTelemetry:
         self.preemption_events: list = []
         self.migrations_in = 0
         self.migrations_out = 0
-        self._preempts: collections.deque[float] = collections.deque()
+        self._preempts = _Ring(1)
         # chaos accounting (repro.chaos): injector actions plus the engine's
         # degradation counters mirrored at the last tick (getattr-guarded —
         # pre-chaos engines simply read as zero)
@@ -111,6 +187,13 @@ class RollingTelemetry:
         self.degraded_windows = 0
         self.degraded_s = 0.0
         self._last_nodes_down = 0
+        # per-tick cluster sums memo keyed on (id, version, topo_version):
+        # every ClusterState mutation bumps a version, so unchanged-version
+        # ticks (arrival batches on a saturated cluster) reuse the sums
+        # instead of re-reducing O(n_nodes) arrays; duck-typed clusters
+        # without version counters recompute every tick
+        self._sums_key = None
+        self._sums = (0, 0, 0)
 
     # ------------------------------------------------------------ hook API ----
     def on_submit(self, job: Job, now: float) -> None: ...
@@ -118,8 +201,8 @@ class RollingTelemetry:
     def on_start(self, job: Job, now: float) -> None: ...
 
     def on_finish(self, job: Job, now: float) -> None:
-        self._fin.append(_FinRec(now, job.jct, job.wait_time, job.vc,
-                                 job.num_gpus * (now - job.start_time)))
+        self._fin.append(now, job.jct, job.wait_time, job.vc,
+                         job.num_gpus * (now - job.start_time))
         self.total_finished += 1
 
     def on_requeue(self, job: Job, now: float) -> None:
@@ -140,19 +223,28 @@ class RollingTelemetry:
             self._next_sample = now + self.sample_interval
         if now > self._last_t:
             dt = now - self._last_t
-            self._segments.append((self._last_t, now, self._last_busy))
+            self._segments.append(self._last_t, now, self._last_busy)
             self.provisioned_gpu_s += dt * self._last_prov
             self.used_gpu_s += dt * self._last_busy_gpus
         self._last_t = now
         cluster = engine.cluster
-        mask = ~cluster.retired
-        prov = int(cluster.total_gpus[mask].sum())
-        busy = int((cluster.total_gpus[mask] - cluster.free_gpus[mask]).sum())
+        ver = getattr(cluster, "version", None)
+        key = (None if ver is None
+               else (id(cluster), ver, getattr(cluster, "topo_version", 0)))
+        if key is None or key != self._sums_key:
+            mask = ~cluster.retired
+            prov = int(cluster.total_gpus[mask].sum())
+            busy = int((cluster.total_gpus[mask]
+                        - cluster.free_gpus[mask]).sum())
+            down = getattr(cluster, "node_down", None)
+            ndown = 0 if down is None else int((down & mask).sum())
+            self._sums_key = key
+            self._sums = (prov, busy, ndown)
+        prov, busy, ndown = self._sums
         self._last_prov = float(prov)
         self._last_busy_gpus = float(busy)
         self._last_busy = busy / max(prov, 1)
-        down = getattr(cluster, "node_down", None)
-        self._last_nodes_down = 0 if down is None else int((down & mask).sum())
+        self._last_nodes_down = ndown
         self.reclaimed_jobs = getattr(engine, "reclaimed_jobs", 0)
         self.milp_calls = getattr(engine, "milp_calls", 0)
         self.milp_fallbacks = getattr(engine, "milp_fallbacks", 0)
@@ -166,48 +258,59 @@ class RollingTelemetry:
     # ------------------------------------------------------------ internals ----
     def _evict(self, now: float) -> None:
         lo = now - self.window
-        while self._fin and self._fin[0].t < lo:
-            self._fin.popleft()
-        while self._requeues and self._requeues[0] < lo:
-            self._requeues.popleft()
-        while self._preempts and self._preempts[0] < lo:
-            self._preempts.popleft()
-        while self._segments and self._segments[0][1] <= lo:
-            self._segments.popleft()
+        self._fin.evict_lt(0, lo)
+        self._requeues.evict_lt(0, lo)
+        self._preempts.evict_lt(0, lo)
+        self._segments.evict_le(1, lo)
 
     def _windowed_util(self, now: float) -> float:
         lo = now - self.window
-        num = span = 0.0
-        for (a, b, busy) in self._segments:
-            a = max(a, lo)
-            if b <= a:
-                continue
-            num += (b - a) * busy
-            span += (b - a)
-        return num / span if span > 0 else self._last_busy
+        a = self._segments.view(0)
+        if a.size:
+            # clip to the window and integrate; cumsum accumulates strictly
+            # left-to-right, matching the scalar `num += (b-a)*busy` loop
+            # term for term in float64
+            a2 = np.maximum(a, lo)
+            d = self._segments.view(1) - a2
+            keep = d > 0
+            if keep.any():
+                dk = d[keep]
+                num = float(np.cumsum(dk * self._segments.view(2)[keep])[-1])
+                span = float(np.cumsum(dk)[-1])
+                return num / span if span > 0 else self._last_busy
+        return self._last_busy
 
     def _sample(self, now: float, engine) -> TelemetrySample:
-        jcts = np.array([r.jct for r in self._fin]) if self._fin else None
-        waits = np.array([r.wait for r in self._fin]) if self._fin else None
-
-        def pct(arr, q):
-            return float(np.percentile(arr, q)) if arr is not None else 0.0
-
-        by_vc: dict[int, float] = {}
-        for r in self._fin:
-            by_vc[r.vc] = by_vc.get(r.vc, 0.0) + r.gpu_seconds
-        span = min(self.window, max(now - (self._segments[0][0]
-                                           if self._segments else now), 1e-9))
+        n_fin = len(self._fin)
+        if n_fin:
+            # one multi-q percentile call per metric: sorts the window once
+            # and interpolates each q off the same sorted data — the same
+            # values three per-q calls produced, one sort instead of three
+            jp50, jp95, jp99 = np.percentile(self._fin.view(1), (50, 95, 99))
+            wp50, wp95, wp99 = np.percentile(self._fin.view(2), (50, 95, 99))
+            # per-VC GPU-second shares: bincount accumulates weights
+            # sequentially in record order (same float adds as the dict
+            # loop), reported in first-occurrence order like dict insertion
+            vcs = self._fin.view(3)
+            uniq, first, inv = np.unique(vcs, return_index=True,
+                                         return_inverse=True)
+            sums = np.bincount(inv, weights=self._fin.view(4))
+            shares = sums[np.argsort(first, kind="stable")].tolist()
+        else:
+            jp50 = jp95 = jp99 = wp50 = wp95 = wp99 = 0.0
+            shares = []
+        seg_a = self._segments.view(0)
+        span = min(self.window, max(now - (seg_a[0] if seg_a.size else now),
+                                    1e-9))
         return TelemetrySample(
-            time=now, window=self.window, finished_in_window=len(self._fin),
-            throughput_jph=len(self._fin) * 3600.0 / span,
-            jct_p50=pct(jcts, 50), jct_p95=pct(jcts, 95), jct_p99=pct(jcts, 99),
-            wait_p50=pct(waits, 50), wait_p95=pct(waits, 95),
-            wait_p99=pct(waits, 99),
+            time=now, window=self.window, finished_in_window=n_fin,
+            throughput_jph=n_fin * 3600.0 / span,
+            jct_p50=float(jp50), jct_p95=float(jp95), jct_p99=float(jp99),
+            wait_p50=float(wp50), wait_p95=float(wp95), wait_p99=float(wp99),
             utilization=self._windowed_util(now),
             queue_len=len(engine.pending), running=len(engine.running),
             requeues=len(self._requeues),
-            vc_fairness=jain_index(list(by_vc.values())),
+            vc_fairness=jain_index(shares),
             preemptions=len(self._preempts),
             nodes_down=self._last_nodes_down,
             reclaimed=self.reclaimed_jobs,

@@ -190,6 +190,42 @@ def test_degraded_ratio_boundaries():
     assert tel3.degraded_fraction() == 0.0
 
 
+def test_sample_percentiles_exact_vs_numpy_reference():
+    """The vectorized one-pass percentile path (single multi-q
+    ``np.percentile`` over the ring view) must equal a per-quantile
+    ``np.percentile`` over the raw wait/jct arrays bit-for-bit — the
+    contract that made the sort-once rewrite a pure optimization."""
+    tel = RollingTelemetry(window=1e6, sample_interval=math.inf)
+    eng = _FakeEngine()
+    _tick(tel, eng, 0.0)
+    rng = np.random.default_rng(7)
+    waits, jcts = [], []
+    t = 50_000.0   # keep start/submit positive for the longest runtimes
+    for jid in range(257):   # odd count: exercises interpolated quantiles
+        wait = float(rng.uniform(0.0, 5000.0))
+        run = float(rng.uniform(60.0, 20000.0))
+        t += float(rng.uniform(1.0, 30.0))
+        start = t - run
+        submit = start - wait
+        tel.on_finish(_finished_job(jid, submit, start, t), t)
+        # mirror the exact float ops Job.wait_time / Job.jct perform so the
+        # comparison below is bit-exact, not approx
+        waits.append(start - submit)
+        jcts.append(t - submit)
+    _tick(tel, eng, t)
+    s = tel._sample(t, eng)
+    w = np.array(waits)
+    j = np.array(jcts)
+    # exact equality, not approx: same float64 data, same interpolation
+    assert s.wait_p50 == float(np.percentile(w, 50))
+    assert s.wait_p95 == float(np.percentile(w, 95))
+    assert s.wait_p99 == float(np.percentile(w, 99))
+    assert s.jct_p50 == float(np.percentile(j, 50))
+    assert s.jct_p95 == float(np.percentile(j, 95))
+    assert s.jct_p99 == float(np.percentile(j, 99))
+    assert s.finished_in_window == 257
+
+
 def test_milp_fallback_rate_boundaries():
     """milp_fallback_rate pinned at 0.0 (solver never eligible, or never
     fell back) and exactly 1.0 (every eligible alloc degraded to greedy)."""

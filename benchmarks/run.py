@@ -6,11 +6,16 @@ artifact (e.g. ``BENCH_streaming.json``) that is listed in the run summary
 so cross-PR perf tracking knows where to look.  Module selection:
 ``python -m benchmarks.run [module ...]`` with modules in {latency, kernels,
 roofline, variability, naive, qssf, util, transfer, policies, streaming,
-federation, rl_streaming, autoscaling, preemption, chaos, obs, scale_curve}.
+federation, rl_streaming, autoscaling, preemption, chaos, obs, scale_curve,
+prediction}.
 ``--smoke`` runs every selected module that supports it in its fast CI mode
 (modules whose ``run`` accepts a ``smoke`` kwarg; others run normally).
 ``--rss`` stamps peak-RSS (resource.getrusage) into every bench point of
 modules that support it.  REPRO_BENCH_SCALE=full for paper-scale runs.
+
+A module that raises marks the whole run failed: remaining modules still
+execute (maximum signal per CI run), but the driver exits nonzero so the
+pipeline cannot green-light on a half-complete benchmark sweep.
 """
 from __future__ import annotations
 
@@ -22,7 +27,7 @@ import time
 MODULES = ("latency", "kernels", "roofline", "variability", "naive", "qssf",
            "util", "transfer", "policies", "streaming", "federation",
            "rl_streaming", "autoscaling", "preemption", "chaos", "obs",
-           "scale_curve")
+           "scale_curve", "prediction")
 
 
 def main() -> None:
@@ -36,6 +41,7 @@ def main() -> None:
     want = [a for a in args if a not in ("--smoke", "--rss")] or list(MODULES)
     rows: list[str] = []
     artifacts: list[str] = []
+    failed: list[str] = []
     t0 = time.time()
     special = {"roofline": "benchmarks.roofline",
                "naive": "benchmarks.bench_naive_vs_pro"}
@@ -55,6 +61,7 @@ def main() -> None:
             traceback.print_exc()
             print(f"[bench {name} FAILED] {e!r}")
             rows.append(f"{name}/FAILED,0,{e!r}")
+            failed.append(name)
             ok = False
         path = getattr(mod, "JSON_PATH", None)
         # only report the artifact on success — a stale file from a prior
@@ -69,6 +76,9 @@ def main() -> None:
     for a in artifacts:
         print(f"# json artifact: {a}")
     print(f"# total bench time {time.time() - t0:.0f}s")
+    if failed:
+        print(f"# FAILED modules: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

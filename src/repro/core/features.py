@@ -132,7 +132,10 @@ def _build_features_scalar(
         out[k, _IDX["urgency"]] = urgency
         out[k, _IDX["future_avail"]] = np.clip(fa, -1.0, 1.0)
         out[k, _IDX["cff"]] = cff
-    return out
+    # NaN/inf guard: corrupt trace fields (inf est_runtime, NaN memory)
+    # must not poison a whole policy/predictor batch; identity on finite
+    # inputs, so well-formed paths are bit-unchanged
+    return np.nan_to_num(out, nan=0.0, posinf=1.0, neginf=-1.0)
 
 
 def _vnorm(x: np.ndarray, scale: float) -> np.ndarray:
@@ -213,7 +216,8 @@ def _build_features_vec(
     out[:, _IDX["urgency"]] = _vnorm(wait / np.maximum(rt, 60.0), 4.0)
     out[:, _IDX["future_avail"]] = np.clip(fa, -1.0, 1.0)
     out[:, _IDX["cff"]] = cff
-    return out
+    # same NaN/inf guard as the scalar reference (identity on finite values)
+    return np.nan_to_num(out, nan=0.0, posinf=1.0, neginf=-1.0)
 
 
 def sample_features(feats: np.ndarray, cluster: ClusterState) -> tuple[np.ndarray, list[str]]:

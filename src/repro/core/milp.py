@@ -85,6 +85,24 @@ def _slot_ranges(ways: list[Placement]) -> list[dict[int, tuple[int, int]]]:
     return ranges
 
 
+def _lookahead_weights(lookahead: list[Job],
+                       durations: list[float] | None) -> list[float] | None:
+    """Objective weights from predicted look-ahead durations: the decayed
+    credit for fitting look-ahead job k scales with its predicted GPU-time
+    (hours, clamped to [0.1, 8] so one wild prediction cannot dominate the
+    occupancy terms).  ``None`` (no predictor) keeps the declared-duration
+    assumption — the exact pre-prediction coefficients.  Weights are
+    rounded so the solution cache keys on the same values the solver
+    reads."""
+    if durations is None or not lookahead:
+        return None
+    out = []
+    for k in range(len(lookahead)):
+        d = durations[k] if k < len(durations) else 3600.0
+        out.append(round(min(max(d / 3600.0, 0.1), 8.0), 4))
+    return out
+
+
 def choose_allocation(
     cluster: ClusterState,
     job: Job,
@@ -94,21 +112,29 @@ def choose_allocation(
     lookahead_k: int = 8,
     use_solver: bool = True,
     solution_cache: bool = True,
+    durations: list[float] | None = None,
 ) -> MILPResult:
     """Pick the best of `ways` for `job` under multi-resource + look-ahead MILP.
 
     `ways` must be non-empty feasible placements (way1=spread first, way2=pack).
 
+    ``durations`` (optional, aligned with ``lookahead``) are predicted
+    runtimes replacing the declared-duration assumption in the look-ahead
+    objective terms (see ``_lookahead_weights``); ``None`` is bit-identical
+    to the pre-prediction solver.
+
     With ``solution_cache`` (default) the result is memoized on the cluster
-    instance keyed by (job shape, ways, look-ahead shapes) at the current
-    cluster version — exact, since every input the solve reads is a pure
-    function of those; any mutation bumps the version and invalidates.
+    instance keyed by (job shape, ways, look-ahead shapes, duration
+    weights) at the current cluster version — exact, since every input the
+    solve reads is a pure function of those; any mutation bumps the
+    version and invalidates.
     """
     assert ways, "choose_allocation requires at least one candidate way"
     if len(ways) == 1:
         return MILPResult(ways[0], 0, float(job.num_gpus), False, 0)
     ways = ways[:2]  # Algorithm 1 is binary: way1 vs way2
     lookahead = (lookahead or [])[:lookahead_k]
+    weights = _lookahead_weights(lookahead, durations)
 
     cache = key = None
     if solution_cache:
@@ -121,17 +147,18 @@ def choose_allocation(
         key = (_job_shape(job),
                tuple(tuple(sorted(w.items())) for w in ways),
                tuple(_job_shape(lj) for lj in lookahead),
-               use_solver)
+               use_solver,
+               None if weights is None else tuple(weights))
         hit = cache.get(key)
         if hit is not None:
             return hit
 
     if use_solver and _HAVE_SCIPY:
-        res = _solve_milp(cluster, job, ways, lookahead)
+        res = _solve_milp(cluster, job, ways, lookahead, weights)
     else:
         res = None
     if res is None:
-        res = _greedy_choice(cluster, job, ways, lookahead)
+        res = _greedy_choice(cluster, job, ways, lookahead, weights)
     if cache is not None:
         cache[key] = res
     return res
@@ -252,6 +279,7 @@ def _solve_milp(
     job: Job,
     ways: list[Placement],
     lookahead: list[Job],
+    weights: list[float] | None = None,
 ) -> MILPResult | None:
     n_nodes = len(cluster.gpu_types)
     gpn = int(cluster.total_gpus.max())             # gpus_per_node (slot count)
@@ -269,7 +297,8 @@ def _solve_milp(
         A.flat[sk.cpu_y_idx[k]] = lj.req_cpus / max(lj.num_gpus, 1)
         A.flat[sk.mem_y_idx[k]] = lj.req_mem_gb / max(lj.num_gpus, 1)
         A[3 * n_nodes + k, sk.z0 + k] = -float(lj.num_gpus)   # gang z coeff
-        sk.c[sk.z0 + k] = -(0.5 ** (k + 1)) * lj.num_gpus
+        zc = -(0.5 ** (k + 1)) * lj.num_gpus
+        sk.c[sk.z0 + k] = zc if weights is None else zc * weights[k]
         # y are integer GPU counts, bounded by node free GPUs and job demand;
         # nodes_for hits the cluster's topology-versioned eligibility cache
         elig = cluster.nodes_for(lj)
@@ -311,6 +340,7 @@ def _solve_milp_reference(
     job: Job,
     ways: list[Placement],
     lookahead: list[Job],
+    weights: list[float] | None = None,
 ) -> MILPResult | None:
     """Per-call dense matrix builder (the pre-memoization implementation),
     retained verbatim as the differential reference for ``_solve_milp``."""
@@ -392,7 +422,8 @@ def _solve_milp_reference(
     c = np.zeros(nvar)
     c[1:1 + n_cjo] = -1.0
     for k, lj in enumerate(lookahead):
-        c[zvar(k)] = -(0.5 ** (k + 1)) * lj.num_gpus
+        zc = -(0.5 ** (k + 1)) * lj.num_gpus
+        c[zvar(k)] = zc if weights is None else zc * weights[k]
 
     try:
         res = milp(
@@ -420,6 +451,7 @@ def _greedy_choice(
     job: Job,
     ways: list[Placement],
     lookahead: list[Job],
+    weights: list[float] | None = None,
 ) -> MILPResult:
     """Fragmentation-aware heuristic: prefer packing when it leaves larger
     contiguous blocks for upcoming multi-GPU jobs; spread under contention."""
@@ -438,7 +470,9 @@ def _greedy_choice(
                 tmp[ii] -= take
                 need -= take
                 if need <= 0:
-                    satisfied += 0.5 ** (k + 1)
+                    credit = 0.5 ** (k + 1)
+                    satisfied += credit if weights is None \
+                        else credit * weights[k]
                     break
         return big * 0.01 + satisfied
 

@@ -183,21 +183,43 @@ def generate_trace(profile: TraceProfile | str, num_jobs: int, seed: int = 0) ->
     return jobs
 
 
+#: Stand-in runtime for unknown-duration jobs with no estimate either.
+DEFAULT_UNKNOWN_RUNTIME_S = 3600.0
+
+
 def load_trace_csv(path: str) -> list[Job]:
-    """Load a real trace in the normalized CSV schema."""
+    """Load a real trace in the normalized CSV schema.
+
+    A missing or empty ``runtime`` cell marks the job unknown-duration
+    (``duration_known=False``): its ``runtime`` falls back to the declared
+    estimate (or :data:`DEFAULT_UNKNOWN_RUNTIME_S` when that is absent too)
+    and the runtime predictor, not the declared value, is expected to serve
+    its reservations.  Real traces routinely drop durations for killed or
+    still-running jobs — rejecting the whole file over them loses the rest.
+    """
     jobs: list[Job] = []
     with open(path, newline="") as f:
         for i, row in enumerate(csv.DictReader(f)):
-            rt = float(row["runtime"])
+            raw_rt = (row.get("runtime") or "").strip()
+            raw_est = (row.get("est_runtime") or "").strip()
+            known = bool(raw_rt)
+            if known:
+                rt = float(raw_rt)
+                est = float(raw_est) if raw_est else rt
+            else:
+                est = float(raw_est) if raw_est \
+                    else DEFAULT_UNKNOWN_RUNTIME_S
+                rt = est
             jobs.append(Job(
                 job_id=int(row.get("job_id", i)),
                 user=int(row.get("user", 0)),
                 submit_time=float(row["submit_time"]),
                 runtime=rt,
-                est_runtime=float(row.get("est_runtime", rt)),
+                est_runtime=est,
                 num_gpus=int(row["num_gpus"]),
                 gpu_type=row.get("gpu_type", "any") or "any",
                 vc=int(row.get("vc", 0) or 0),
+                duration_known=known,
             ))
     jobs.sort(key=lambda j: j.submit_time)
     return jobs

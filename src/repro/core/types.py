@@ -51,6 +51,10 @@ class Job:
     # the preemption controller may resize num_gpus inside [min, max]
     min_gpus: int = 0
     max_gpus: int = 0
+    # False when the source trace carried no duration for this job — its
+    # ``runtime`` is a stand-in (est_runtime or a default) and the runtime
+    # predictor, not the declared estimate, should serve its reservations
+    duration_known: bool = True
 
     # -- mutable scheduling state -------------------------------------------------
     state: JobState = JobState.PENDING
@@ -116,7 +120,7 @@ class Job:
             num_gpus=self.base_gpus or self.num_gpus, gpu_type=self.gpu_type,
             vc=self.vc, req_cpus=self.req_cpus, req_mem_gb=self.req_mem_gb,
             arch=self.arch, deadline=self.deadline, min_gpus=self.min_gpus,
-            max_gpus=self.max_gpus,
+            max_gpus=self.max_gpus, duration_known=self.duration_known,
         )
 
 

@@ -143,6 +143,7 @@ class FederatedScheduler:
         migration=None,
         obs=None,
         parallel: bool = False,
+        predictors: Sequence | None = None,
     ):
         if not clusters:
             raise ValueError("a federation needs at least one cluster")
@@ -162,6 +163,15 @@ class FederatedScheduler:
         if len(self.autoscalers) != len(clusters):
             raise ValueError(f"{len(clusters)} clusters but "
                              f"{len(self.autoscalers)} autoscalers")
+        #: per-member runtime predictors (repro.predict.RuntimePredictor):
+        #: engines must never share predictor state (online training and the
+        #: feature cache are per engine).  None entries leave that member
+        #: bit-identical to the predictor-less engine (pinned by tests).
+        self.predictors = list(predictors) if predictors is not None \
+            else [None] * len(clusters)
+        if len(self.predictors) != len(clusters):
+            raise ValueError(f"{len(clusters)} clusters but "
+                             f"{len(self.predictors)} predictors")
         # scale-ups append to each member's spec.nodes: autoscaled members
         # get their own spec copy so caller-held fleet runs stay replayable
         clusters = [ClusterSpec(nodes=list(s.nodes), name=s.name)
@@ -183,6 +193,8 @@ class FederatedScheduler:
             if obs is not None:
                 mobs = obs.member(i, name=spec.name or f"cluster{i}")
                 hooks.extend(mobs.hooks())
+            if self.predictors[i] is not None:
+                hooks.append(self.predictors[i])
             if isinstance(pri, QuotaPrioritizer) and pri.incremental:
                 pri.reset_usage()
                 hooks.append(pri)
@@ -192,7 +204,8 @@ class FederatedScheduler:
             engine = SchedulerEngine(
                 spec, pri, allocator=allocator, backfill=backfill,
                 lookahead_k=lookahead_k, fault_model=fms[i],
-                queue_window=queue_window, hooks=hooks, optimized=optimized)
+                queue_window=queue_window, hooks=hooks, optimized=optimized,
+                predictor=self.predictors[i])
             if isinstance(pri, QuotaPrioritizer):
                 pri.engine = engine
             self.engines.append(engine)
@@ -619,6 +632,7 @@ def run_fleet(
     chaos=None,
     obs=None,
     parallel: bool = False,
+    predictor_factory: Callable | None = None,
 ) -> FleetStreamResult:
     """Replay a fleet scenario (or a prebuilt ``FleetRun``) through a fresh
     federation in lockstep rescan windows: each window's arrivals are routed
@@ -631,6 +645,11 @@ def run_fleet(
     controller (return ``None`` for fixed-capacity members); controllers
     tick at every lockstep window edge and routers see scaled capacity
     through the refreshed views.
+
+    ``predictor_factory(i, spec)`` builds member ``i``'s
+    ``repro.predict.RuntimePredictor`` (return ``None`` for predictor-less
+    members) — predictors train per member from that engine's completion
+    hooks and must never be shared across members.
 
     ``migration`` attaches a ``repro.lifecycle.migration`` policy: waiting
     jobs re-route between members at every window edge when fresh snapshots
@@ -667,6 +686,10 @@ def run_fleet(
     if autoscaler_factory is not None:
         autoscalers = [autoscaler_factory(i, spec)
                        for i, spec in enumerate(run.clusters)]
+    predictors = None
+    if predictor_factory is not None:
+        predictors = [predictor_factory(i, spec)
+                      for i, spec in enumerate(run.clusters)]
     fed = FederatedScheduler(
         run.clusters, router, prioritizer_factory=factory,
         allocator=allocator, backfill=backfill,
@@ -674,7 +697,7 @@ def run_fleet(
         telemetry_window=telemetry_window, sample_interval=sample_interval,
         router_seed=router_seed, optimized=optimized,
         autoscalers=autoscalers, migration=migration, obs=obs,
-        parallel=parallel)
+        parallel=parallel, predictors=predictors)
 
     def _chaos_tick(now):
         if obs is None:

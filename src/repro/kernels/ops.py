@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention_bh
 from repro.kernels.moe_router import moe_router as _moe_router
 from repro.kernels.policy_mlp import policy_mlp as _policy_mlp
+from repro.kernels.predict_mlp import predict_mlp as _predict_mlp
 from repro.kernels.ssd_scan import ssd_scan_bh
 
 
@@ -85,6 +86,16 @@ def policy_mlp(x, params: list[dict], mask, *, interpret: bool | None = None):
     w3, b3 = params[2]["w"], params[2]["b"]
     return _policy_mlp(x, w1, b1, w2, b2, w3, b3, mask,
                        interpret=_interpret(interpret))
+
+
+def predict_mlp(x, params: dict, *, interpret: bool | None = None):
+    """Runtime-predictor forward via the fused kernel.
+
+    params = ``repro.predict.QuantileMLP.params`` (keys w1/b1/w2/b2/w3/b3).
+    Returns per-quantile log-runtime residuals (B, Q) in f32."""
+    return _predict_mlp(x, params["w1"], params["b1"], params["w2"],
+                        params["b2"], params["w3"], params["b3"],
+                        interpret=_interpret(interpret))
 
 
 def moe_router(x, router_w, k: int, *, interpret: bool | None = None):

@@ -274,6 +274,8 @@ _ENGINE_COUNTER_MIRRORS = (
     ("repro_milp_fallbacks_total", "milp_fallbacks"),
     ("repro_degraded_windows_total", "degraded_windows"),
     ("repro_reclaimed_jobs_total", "reclaimed_jobs"),
+    ("repro_predicted_backfills_total", "bf_reservations"),
+    ("repro_backfill_overruns_total", "bf_overruns"),
 )
 
 
@@ -330,6 +332,23 @@ class EngineMetricsHook(EngineHooks):
         self._mirror = [(c(name, f"engine cumulative {attr}", **labels),
                          attr, 0.0)
                         for name, attr in _ENGINE_COUNTER_MIRRORS]
+        # prediction instruments (repro.predict): rolling MAPE per model and
+        # the reservation-slack distribution (p90 headroom at backfill
+        # commit), drained incrementally via the predictor's slack cursor
+        self._mape_mlp = g("repro_prediction_mape",
+                           "rolling MAPE of predicted runtimes",
+                           model="mlp", **labels)
+        self._mape_base = g("repro_prediction_mape",
+                            "rolling MAPE of predicted runtimes",
+                            model="baseline", **labels)
+        self._overrun_ratio = g("repro_backfill_overrun_ratio",
+                                "blown reservations per predictor-gated "
+                                "backfill (clamped [0, 1])", **labels)
+        self._slack = h("repro_reservation_slack_seconds",
+                        "p90 headroom against the head-job reservation at "
+                        "backfill commit (simulated)",
+                        buckets=SIM_DURATION_BUCKETS, **labels)
+        self._slack_cursor = 0
 
     # ----------------------------------------------------------- hook API ----
     def on_submit(self, job, now):
@@ -373,6 +392,17 @@ class EngineMetricsHook(EngineHooks):
             if val > last:
                 counter.inc(val - last)
                 mirror[i] = (counter, attr, val)
+        pred = getattr(engine, "predictor", None)
+        if pred is not None:
+            self._mape_mlp.set(pred.rolling_mape())
+            self._mape_base.set(pred.baseline_rolling_mape())
+            res = getattr(engine, "bf_reservations", 0)
+            self._overrun_ratio.set(
+                min(getattr(engine, "bf_overruns", 0) / max(res, 1), 1.0))
+            slacks, self._slack_cursor = \
+                pred.recent_slacks(self._slack_cursor)
+            for s in slacks:
+                self._slack.observe(s)
 
     # ------------------------------------------------- controller counters ----
     def note_controller(self, kind: str, n_events: int) -> None:

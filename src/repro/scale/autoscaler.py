@@ -151,6 +151,21 @@ class Autoscaler:
             engine.reschedule(at=now)
         return events
 
+    # -------------------------------------------------------------- forecast ----
+    def _forecast_gpu_hours(self, engine) -> float | None:
+        """Predicted GPU-hours of the pending window, when the engine carries
+        an assisting runtime predictor (``repro.predict``).  ``None`` when no
+        predictor is attached or it runs in shadow mode — controllers must
+        then fall back to their reactive signals, keeping the predictor-off
+        path bit-identical."""
+        pred = getattr(engine, "predictor", None)
+        if pred is None or not getattr(pred, "assist", False):
+            return None
+        fn = getattr(pred, "pending_gpu_hours", None)
+        if fn is None:
+            return None
+        return float(fn(engine))
+
     # ------------------------------------------------------------- pool state ---
     def _active_count(self, cluster, sku: str) -> int:
         """Nodes of the pool the bounds govern: not retired, not draining
@@ -252,7 +267,8 @@ class TargetUtilizationAutoscaler(Autoscaler):
 
     def __init__(self, pools: dict[str, PoolSpec], *,
                  util_low: float = 0.35, util_high: float = 0.85,
-                 max_pending_for_down: int = 0, **kw):
+                 max_pending_for_down: int = 0,
+                 forecast_hold_gpu_hours: float = 8.0, **kw):
         if not 0.0 <= util_low < util_high <= 1.0:
             raise ValueError(f"need 0 <= util_low < util_high <= 1, got "
                              f"[{util_low}, {util_high}]")
@@ -260,6 +276,7 @@ class TargetUtilizationAutoscaler(Autoscaler):
         self.util_low = util_low
         self.util_high = util_high
         self.max_pending_for_down = max_pending_for_down
+        self.forecast_hold_gpu_hours = forecast_hold_gpu_hours
 
     def desired_direction(self, engine, now, telemetry) -> tuple[int, str]:
         snap = engine.snapshot()
@@ -272,6 +289,13 @@ class TargetUtilizationAutoscaler(Autoscaler):
         if util > self.util_high:
             return 1, f"{src} util {util:.2f} > {self.util_high:.2f}"
         if util < self.util_low and snap.num_pending <= self.max_pending_for_down:
+            # predicted demand holds capacity that instantaneous utilization
+            # would drain — the forecast sees pending work the utilization
+            # signal has not absorbed yet
+            fc = self._forecast_gpu_hours(engine)
+            if fc is not None and fc >= self.forecast_hold_gpu_hours:
+                return 0, (f"hold: forecast {fc:.1f} GPU-h >= "
+                           f"{self.forecast_hold_gpu_hours:.1f}")
             return -1, f"{src} util {util:.2f} < {self.util_low:.2f}"
         return 0, "in band"
 
@@ -286,7 +310,8 @@ class QueuePressureAutoscaler(Autoscaler):
 
     def __init__(self, pools: dict[str, PoolSpec], *,
                  wait_up_s: float = 1800.0, wait_down_s: float = 300.0,
-                 util_down: float = 0.5, **kw):
+                 util_down: float = 0.5,
+                 forecast_up_gpu_hours: float = 64.0, **kw):
         if not 0.0 <= wait_down_s < wait_up_s:
             raise ValueError(f"need 0 <= wait_down_s < wait_up_s, got "
                              f"[{wait_down_s}, {wait_up_s}]")
@@ -294,6 +319,7 @@ class QueuePressureAutoscaler(Autoscaler):
         self.wait_up_s = wait_up_s
         self.wait_down_s = wait_down_s
         self.util_down = util_down
+        self.forecast_up_gpu_hours = forecast_up_gpu_hours
 
     def desired_direction(self, engine, now, telemetry) -> tuple[int, str]:
         snap = engine.snapshot()
@@ -304,6 +330,13 @@ class QueuePressureAutoscaler(Autoscaler):
             wait_p99, util = 0.0, snap.utilization
         if wait_p99 > self.wait_up_s:
             return 1, f"wait p99 {wait_p99:.0f}s > {self.wait_up_s:.0f}s"
+        if snap.num_pending > 0:
+            # forecast lead: predicted backlog GPU-hours trip the up
+            # watermark before the rolling wait percentile reacts
+            fc = self._forecast_gpu_hours(engine)
+            if fc is not None and fc >= self.forecast_up_gpu_hours:
+                return 1, (f"forecast {fc:.1f} GPU-h >= "
+                           f"{self.forecast_up_gpu_hours:.1f}")
         if snap.num_pending > 0 and snap.free_gpus == 0:
             # backlog against a fully busy cluster: do not wait for the
             # rolling percentile to catch up

@@ -348,10 +348,19 @@ class EngineSnapshot:
     milp_fallbacks: int = 0
     degraded_windows: int = 0
     degraded_s: float = 0.0
+    bf_reservations: int = 0
+    bf_overruns: int = 0
 
     @property
     def in_flight(self) -> int:
         return self.num_pending + self.num_running
+
+    @property
+    def bf_overrun_ratio(self) -> float:
+        """Fraction of predictor-gated backfill reservations that were
+        blown (job preempted past its deadline); 0.0 when prediction-
+        assisted backfill never committed a reservation."""
+        return min(self.bf_overruns / max(self.bf_reservations, 1), 1.0)
 
     @property
     def down_ratio(self) -> float:
@@ -400,6 +409,7 @@ class SchedulerEngine:
         completed_keep: int = 1024,
         deep_lookahead_k: int | None = None,
         deep_queue_threshold: int = 4096,
+        predictor=None,                    # duck-typed RuntimePredictor
     ):
         self.spec = spec
         self.prioritizer = prioritizer
@@ -418,6 +428,18 @@ class SchedulerEngine:
         #: ``repro.chaos``.  ``None`` (the default) never reads the
         #: wall clock — pinned bit-identical to the pre-chaos engine.
         self.degradation = degradation
+        #: online runtime predictor (see ``repro.predict``), duck-typed so
+        #: ``repro.sched`` never imports ``repro.predict``.  ``None`` — and
+        #: an attached predictor in shadow mode (``assist=False``: trains
+        #: from the hook stream, never consulted) — are pinned bit-identical
+        #: to the pre-prediction engine.  With assist on, backfill gates on
+        #: predicted p90 reservations, MILP lookahead gets predicted p50
+        #: durations, and blown reservations preempt at the overrun cost.
+        self.predictor = predictor
+        if predictor is not None:
+            bind = getattr(predictor, "bind", None)
+            if bind is not None:
+                bind(self)
 
         self.cluster = ClusterState(spec, cache=optimized)
         self._seq = itertools.count()
@@ -458,6 +480,16 @@ class SchedulerEngine:
         self.decisions = 0
         self.milp_calls = 0
         self.backfills = 0
+        #: prediction-assisted backfill accounting (inert while the
+        #: predictor is off): reservations committed under a predicted-p90
+        #: gate, reservations blown (job preempted past its deadline), the
+        #: per-job deadlines themselves, and jobs that already blew one
+        #: reservation (barred from further predictor-gated backfills so an
+        #: unlearnable job cannot thrash preempt/backfill forever)
+        self.bf_reservations = 0
+        self.bf_overruns = 0
+        self._bf_deadlines: dict[int, float] = {}
+        self._bf_overrun_jobs: set[int] = set()
         self.restarts = 0
         self.preemptions = 0
         self.resume_penalty_gpu_s = 0.0
@@ -589,6 +621,8 @@ class SchedulerEngine:
             milp_fallbacks=self.milp_fallbacks,
             degraded_windows=self.degraded_windows,
             degraded_s=self.degraded_s,
+            bf_reservations=self.bf_reservations,
+            bf_overruns=self.bf_overruns,
         )
 
     # ------------------------------------------------------ pending queue ----
@@ -822,7 +856,20 @@ class SchedulerEngine:
         rt = job.est_runtime if self.prioritizer.use_estimates else job.runtime
         return max(rt, 1.0)
 
-    def _alloc_for(self, job: Job, queue_rest: list[Job]) -> Placement | None:
+    def _lookahead_durations(self, rest: list[Job]) -> list[float] | None:
+        """Predicted p50 durations for the MILP lookahead jobs when
+        prediction assist is on; None (the declared-duration assumption,
+        bit-identical to the pre-prediction solver) otherwise."""
+        if not rest:
+            return None
+        pred = self._predict_assist()
+        if pred is None:
+            return None
+        la = getattr(pred, "lookahead_durations", None)
+        return la(rest, self) if la is not None else None
+
+    def _alloc_for(self, job: Job, queue_rest: list[Job],
+                   durations: list[float] | None = None) -> Placement | None:
         """Placement attempt for one job; with alloc observers attached
         (``repro.obs``) each *successful* attempt is wall-clock timed and
         reported with the path that produced it (``milp`` /
@@ -835,10 +882,10 @@ class SchedulerEngine:
         overhead when off."""
         obs = self._alloc_obs
         if not obs:
-            return self._alloc_impl(job, queue_rest)
+            return self._alloc_impl(job, queue_rest, durations)
         calls0, fb0 = self.milp_calls, self.milp_fallbacks
         t0 = time.perf_counter()
-        placement = self._alloc_impl(job, queue_rest)
+        placement = self._alloc_impl(job, queue_rest, durations)
         if placement is None:
             return None
         wall = time.perf_counter() - t0
@@ -852,7 +899,8 @@ class SchedulerEngine:
             h.on_alloc(job, placement, self.now, wall, path)
         return placement
 
-    def _alloc_impl(self, job: Job, queue_rest: list[Job]) -> Placement | None:
+    def _alloc_impl(self, job: Job, queue_rest: list[Job],
+                    durations: list[float] | None = None) -> Placement | None:
         ways = self.cluster.candidate_ways(job)
         if not ways:
             return None
@@ -880,12 +928,13 @@ class SchedulerEngine:
         if not timed:
             res = choose_allocation(self.cluster, job, ways, queue_rest,
                                     lookahead_k=self.lookahead_k,
-                                    use_solver=use_solver)
+                                    use_solver=use_solver,
+                                    durations=durations)
             return res.placement
         t_solve = time.perf_counter()
         res = choose_allocation(self.cluster, job, ways, queue_rest,
                                 lookahead_k=self.lookahead_k,
-                                use_solver=True)
+                                use_solver=True, durations=durations)
         if time.perf_counter() - t_solve > deg.milp_budget_s:
             self._deg_slow_streak += 1
             if self._deg_slow_streak >= deg.trip_after:
@@ -956,6 +1005,8 @@ class SchedulerEngine:
         take over requeueing themselves: ``requeue=False`` leaves the job
         in the ``via`` state for the caller to route onward."""
         job, placement, st, fin, speed = self.running.pop(jid)
+        if self._bf_deadlines:
+            self._bf_deadlines.pop(jid, None)
         if self.optimized:
             self._finish_index_remove(fin, jid)
         self.cluster.release(job, placement)
@@ -1212,6 +1263,8 @@ class SchedulerEngine:
         if rec is None:
             return
         job, placement, st, fin, speed = rec
+        if self._bf_deadlines:
+            self._bf_deadlines.pop(jid, None)
         if self.optimized:
             self._finish_index_remove(fin, jid)
         self.cluster.release(job, placement)
@@ -1340,7 +1393,39 @@ class SchedulerEngine:
             if fn is not None:
                 fn(queue, order, self.now, self)
 
+    def _predict_assist(self):
+        """The attached predictor, iff it should steer decisions (assist
+        mode); None when off or in shadow mode."""
+        p = self.predictor
+        return p if p is not None and getattr(p, "assist", False) else None
+
+    def _enforce_reservations(self) -> None:
+        """Overrun handling for predictor-gated backfills: a backfilled job
+        still running past its reservation deadline (plus the overrun
+        policy's grace) while work is waiting is checkpoint-preempted
+        through the normal ``preempt_job`` path at the policy's charged
+        cost — the head job's reservation is honored instead of silently
+        delayed.  Offenders are barred from further predictor-gated
+        backfills.  Inert (never called) while no deadline is recorded."""
+        pred = self.predictor
+        pol = getattr(pred, "overrun", None) if pred is not None else None
+        grace = getattr(pol, "grace_s", 0.0) if pol is not None else 0.0
+        for jid, deadline in list(self._bf_deadlines.items()):
+            if jid not in self.running:
+                self._bf_deadlines.pop(jid, None)   # finished/killed already
+                continue
+            if self.now <= deadline + grace:
+                continue
+            if not self.pending:
+                continue                 # nobody waiting: let it run on
+            self._bf_deadlines.pop(jid, None)
+            self._bf_overrun_jobs.add(jid)
+            self.preempt_job(jid, pol)
+            self.bf_overruns += 1
+
     def _try_schedule(self) -> None:
+        if self._bf_deadlines:
+            self._enforce_reservations()
         deg = self.degradation
         if deg is None:
             return self._schedule_pass()
@@ -1444,8 +1529,9 @@ class SchedulerEngine:
                     and len(self.pending) > self.deep_queue_threshold):
                 k_look = min(k_look, self.deep_lookahead_k)
             rest = [queue[i] for i in order[1:1 + k_look]]
+            durations = self._lookahead_durations(rest)
             calls0, fb0 = self.milp_calls, self.milp_fallbacks
-            placement = self._alloc_for(top, rest)
+            placement = self._alloc_for(top, rest, durations)
             if placement is not None:
                 if rec is not None:
                     rec["placed"] = True
@@ -1487,8 +1573,23 @@ class SchedulerEngine:
             # the scalar loop's count exactly.
             pindex = self._pindex
             w = len(queue)
-            rt_col = pindex._est if prioritizer.use_estimates else pindex._rt
-            time_ok = self.now + np.maximum(rt_col[:w], 1.0) <= t_res
+            pred = self._predict_assist()
+            if pred is not None:
+                # prediction-assisted gate: a candidate backfills only if
+                # its predicted p90 runtime fits before the reservation —
+                # conservative quantile in place of the declared runtime.
+                # Jobs that already blew a reservation are barred.
+                p90 = np.maximum(pred.reserve_batch(queue, self), 1.0)
+                time_ok = self.now + p90 <= t_res
+                barred = self._bf_overrun_jobs
+                if barred:
+                    for k, cj in enumerate(queue):
+                        if cj.job_id in barred:
+                            time_ok[k] = False
+            else:
+                rt_col = pindex._est if prioritizer.use_estimates \
+                    else pindex._rt
+                time_ok = self.now + np.maximum(rt_col[:w], 1.0) <= t_res
             sid_snap = pindex._sid[:w].copy()   # survives removals below
             order_arr = np.asarray(order[1:], dtype=np.intp)
             ok = time_ok[order_arr]
@@ -1525,6 +1626,12 @@ class SchedulerEngine:
                     self._start_job(cand, pl)
                     self.backfills += 1
                     progressed = True
+                    if pred is not None and t_res < math.inf:
+                        self.bf_reservations += 1
+                        self._bf_deadlines[cand.job_id] = t_res
+                        note = getattr(pred, "note_reservation", None)
+                        if note is not None:
+                            note(t_res - (self.now + float(p90[i])))
                     if rec is not None:
                         rec["backfills"] += 1
                     # the allocation bumped cluster.version: start fresh
@@ -1566,6 +1673,8 @@ class SchedulerEngine:
         "completed_summary", "completed_count", "completed_ring",
         "_sum_jct", "_sum_wait", "_max_finish",
         "deep_lookahead_k", "deep_queue_threshold",
+        "predictor", "bf_reservations", "bf_overruns", "_bf_deadlines",
+        "_bf_overrun_jobs",
     )
 
     def save_state(self) -> bytes:
@@ -1620,6 +1729,15 @@ class SchedulerEngine:
         if isinstance(pri, EngineHooks) and getattr(pri, "incremental",
                                                     False):
             eng.hooks.append(pri)
+        # a predictor travelling inside the blob (trained weights, MAPE
+        # state) is rebound and re-attached as a hook so training resumes
+        pred = eng.predictor
+        if pred is not None:
+            bind = getattr(pred, "bind", None)
+            if bind is not None:
+                bind(eng)
+            if pred not in eng.hooks:
+                eng.hooks.append(pred)
         eng._rebuild_hook_dispatch()
         return eng
 
@@ -1641,7 +1759,8 @@ class SchedulerEngine:
                 self._fire_decision(queue, order)
             top = queue[order[0]]
             rest = [queue[i] for i in order[1:1 + self.lookahead_k]]
-            placement = self._alloc_for(top, rest)
+            placement = self._alloc_for(top, rest,
+                                        self._lookahead_durations(rest))
             if placement is not None:
                 self.pending.remove(top)
                 self._start_job(top, placement)
@@ -1651,11 +1770,18 @@ class SchedulerEngine:
             # EASY backfill under reservation for `top`
             t_res = self._earliest_start(top)
             progressed = False
+            pred = self._predict_assist()
             for i in order[1:]:
                 cand = queue[i]
                 if cand.state != JobState.PENDING or cand is top:
                     continue
-                if self.now + self._est_rt(cand) > t_res:
+                if pred is not None:
+                    if cand.job_id in self._bf_overrun_jobs:
+                        continue
+                    rt = max(float(pred.reserve_runtime(cand, self)), 1.0)
+                else:
+                    rt = self._est_rt(cand)
+                if self.now + rt > t_res:
                     continue
                 pl = self._alloc_for(cand, [])
                 if pl is not None:
@@ -1663,6 +1789,12 @@ class SchedulerEngine:
                     self._start_job(cand, pl)
                     self.backfills += 1
                     progressed = True
+                    if pred is not None and t_res < math.inf:
+                        self.bf_reservations += 1
+                        self._bf_deadlines[cand.job_id] = t_res
+                        note = getattr(pred, "note_reservation", None)
+                        if note is not None:
+                            note(t_res - (self.now + rt))
             if not progressed:
                 return
             # after backfills the reserved job may now fit; loop again

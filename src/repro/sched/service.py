@@ -216,6 +216,7 @@ def run_stream(
     chaos=None,
     degradation=None,
     obs=None,
+    predictor=None,
 ) -> StreamResult:
     """Replay ``jobs`` through a fresh engine in rescan-interval windows.
 
@@ -253,6 +254,12 @@ def run_stream(
     audit sinks and wall-clocks every controller tick into the control-plane
     trace.  ``obs=None`` leaves the schedule bit-identical (pinned).
 
+    ``predictor`` (a ``repro.predict.RuntimePredictor``) trains online from
+    completion hooks and — when ``assist=True`` — gates EASY backfill on
+    predicted p90, feeds MILP lookahead durations, and serves autoscaler
+    demand forecasts.  ``predictor=None`` *and* a shadow predictor
+    (``assist=False``) are pinned bit-identical (tested).
+
     All observers — user ``hooks``, telemetry, obs sinks, and the
     incremental quota gate — are composed through one ``MultiHooks``, so a
     duck-typed partial hook object receives exactly the events it defines
@@ -270,6 +277,10 @@ def run_stream(
         children.append(telemetry)
     if obs is not None:
         children.extend(obs.hooks())
+    if predictor is not None:
+        # hook-trained: on_submit caches features, on_finish does one SGD
+        # step — shadow (assist=False) predictors observe without steering
+        children.append(predictor)
     if isinstance(prioritizer, QuotaPrioritizer) and prioritizer.incremental:
         # hook-fed per-VC usage: the engine starts idle, so start from zero
         prioritizer.reset_usage()
@@ -279,7 +290,7 @@ def run_stream(
         spec, prioritizer, allocator=allocator, backfill=backfill,
         lookahead_k=lookahead_k, fault_model=fault_model,
         queue_window=queue_window, hooks=all_hooks, optimized=optimized,
-        degradation=degradation)
+        degradation=degradation, predictor=predictor)
     if isinstance(prioritizer, QuotaPrioritizer):
         prioritizer.engine = engine
 
@@ -385,6 +396,7 @@ def run_scenario(
     chaos=None,
     degradation=None,
     obs=None,
+    predictor=None,
 ) -> StreamResult:
     """Build a registered scenario and stream it through the engine with
     rolling telemetry.  The scenario's SLA population and VC quotas are
@@ -419,4 +431,4 @@ def run_scenario(
         backfill=backfill, fault_model=run.fault_model,
         queue_window=queue_window, telemetry=telemetry, chunked_submit=True,
         autoscaler=autoscaler, preemption=preemption, chaos=chaos,
-        degradation=degradation, obs=obs)
+        degradation=degradation, obs=obs, predictor=predictor)

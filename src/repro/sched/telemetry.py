@@ -129,6 +129,18 @@ class TelemetrySample:
     reclaimed: int = 0           # jobs spot-reclaimed so far
     milp_fallbacks: int = 0      # solver-eligible allocs degraded to greedy
     degraded_windows: int = 0    # rescan windows forced to FCFS so far
+    # prediction mirrors (repro.predict): cumulative reservation/overrun
+    # counters off the engine plus the predictor's rolling error metrics
+    bf_reservations: int = 0     # predictor-gated backfill commits so far
+    bf_overruns: int = 0         # reservations blown (job preempted) so far
+    prediction_mape: float = 0.0       # rolling MAPE, MLP p50 head
+    baseline_mape: float = 0.0         # rolling MAPE, running-mean baseline
+
+    @property
+    def bf_overrun_ratio(self) -> float:
+        """Blown reservations per predictor-gated backfill, clamped [0, 1];
+        0.0 when no reservation has been made (zero-division safe)."""
+        return min(self.bf_overruns / max(self.bf_reservations, 1), 1.0)
 
 
 def jain_index(shares: list[float]) -> float:
@@ -187,6 +199,13 @@ class RollingTelemetry:
         self.degraded_windows = 0
         self.degraded_s = 0.0
         self._last_nodes_down = 0
+        # prediction accounting (repro.predict): engine counters mirrored at
+        # the last tick plus rolling MAPEs read off the attached predictor
+        # (getattr-guarded — predictor-less engines simply read as zero)
+        self.bf_reservations = 0
+        self.bf_overruns = 0
+        self.prediction_mape = 0.0
+        self.baseline_mape = 0.0
         # per-tick cluster sums memo keyed on (id, version, topo_version):
         # every ClusterState mutation bumps a version, so unchanged-version
         # ticks (arrival batches on a saturated cluster) reuse the sums
@@ -250,6 +269,12 @@ class RollingTelemetry:
         self.milp_fallbacks = getattr(engine, "milp_fallbacks", 0)
         self.degraded_windows = getattr(engine, "degraded_windows", 0)
         self.degraded_s = getattr(engine, "degraded_s", 0.0)
+        self.bf_reservations = getattr(engine, "bf_reservations", 0)
+        self.bf_overruns = getattr(engine, "bf_overruns", 0)
+        pred = getattr(engine, "predictor", None)
+        if pred is not None:
+            self.prediction_mape = pred.rolling_mape()
+            self.baseline_mape = pred.baseline_rolling_mape()
         self._evict(now)
         if now >= self._next_sample:
             self.samples.append(self._sample(now, engine))
@@ -316,6 +341,10 @@ class RollingTelemetry:
             reclaimed=self.reclaimed_jobs,
             milp_fallbacks=self.milp_fallbacks,
             degraded_windows=self.degraded_windows,
+            bf_reservations=self.bf_reservations,
+            bf_overruns=self.bf_overruns,
+            prediction_mape=self.prediction_mape,
+            baseline_mape=self.baseline_mape,
         )
 
     # ------------------------------------------------------------ summaries ----

@@ -177,3 +177,69 @@ def test_vectorized_features_bit_identical_fixed(trace, seed, use_est):
     vec = build_features(jobs, c, now, use_estimates=use_est,
                          fields=WindowFields.from_jobs(jobs))
     assert np.array_equal(ref, vec)
+
+
+# ------------------------------------------------------- edge-case coverage --
+
+
+def test_features_zero_gpu_and_oversized_jobs():
+    """Degenerate demands (0 GPUs, demand far past capacity) must stay
+    finite and in range on both builder paths."""
+    from repro.core import Job
+    c = ClusterState(make_cluster("helios"))
+    jobs = [
+        Job(job_id=1, user=0, submit_time=0.0, runtime=100.0,
+            est_runtime=100.0, num_gpus=0),
+        Job(job_id=2, user=1, submit_time=0.0, runtime=100.0,
+            est_runtime=100.0, num_gpus=10_000),
+    ]
+    for use_est in (False, True):
+        f_scalar = _build_features_scalar(jobs, c, 50.0,
+                                          use_estimates=use_est)
+        f_vec = build_features(jobs, c, 50.0, use_estimates=use_est,
+                               fields=WindowFields.from_jobs(jobs))
+        for f in (f_scalar, f_vec):
+            assert np.isfinite(f).all()
+            assert (np.abs(f) <= 1.0 + 1e-6).all()
+        assert np.array_equal(f_scalar, f_vec)
+
+
+def test_features_empty_cluster_context():
+    """A cluster with every node retired/down reports zero capacity; the
+    builders must not divide by it."""
+    c = ClusterState(make_cluster("helios"))
+    c.retired[:] = True
+    c.version += 1
+    jobs = generate_trace("helios", 8, seed=1)
+    feats = build_features(jobs, c, now=10.0)
+    assert feats.shape == (8, NUM_FEATURES)
+    assert np.isfinite(feats).all()
+
+
+def test_features_nan_inf_inputs_guarded():
+    """Corrupt trace fields (NaN/inf runtimes, estimates, memory) must not
+    leak NaN into the policy/predictor batch."""
+    from repro.core import Job
+    bad = [
+        Job(job_id=1, user=0, submit_time=0.0, runtime=float("nan"),
+            est_runtime=float("inf"), num_gpus=2),
+        Job(job_id=2, user=1, submit_time=float("nan"), runtime=100.0,
+            est_runtime=-float("inf"), num_gpus=2,
+            req_mem_gb=float("nan")),
+    ]
+    c = ClusterState(make_cluster("helios"))
+    for use_est in (False, True):
+        feats = build_features(bad, c, now=5.0, use_estimates=use_est)
+        assert np.isfinite(feats).all()
+        scalar = _build_features_scalar(bad, c, 5.0, use_estimates=use_est)
+        assert np.isfinite(scalar).all()
+
+
+def test_features_guard_identity_on_finite_inputs():
+    """The NaN/inf guard is nan_to_num — bit-identity for every well-formed
+    trace is what keeps the pinned schedules unchanged."""
+    jobs = generate_trace("philly", 64, seed=9)
+    c = ClusterState(make_cluster("philly"))
+    feats = build_features(jobs, c, now=1e4)
+    assert np.array_equal(feats, np.nan_to_num(feats, nan=0.0,
+                                               posinf=1.0, neginf=-1.0))

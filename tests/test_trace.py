@@ -59,3 +59,33 @@ def test_split_and_batches():
     assert len(tr) == 270 and len(ev) == 30
     batches = list(batch_iter(jobs, 64))
     assert all(len(b) == 64 for b in batches)
+
+
+def test_csv_missing_duration_marks_unknown(tmp_path):
+    """Empty or absent runtime cells load as unknown-duration jobs
+    (predictor-served) instead of rejecting the file."""
+    p = tmp_path / "partial.csv"
+    with open(p, "w") as f:
+        f.write("job_id,user,submit_time,runtime,est_runtime,num_gpus\n")
+        f.write("1,0,0.0,500.0,450.0,2\n")       # fully specified
+        f.write("2,1,10.0,,300.0,4\n")           # no runtime, has estimate
+        f.write("3,2,20.0,,,1\n")                # neither
+    jobs = {j.job_id: j for j in load_trace_csv(str(p))}
+    assert len(jobs) == 3
+    assert jobs[1].duration_known and jobs[1].runtime == 500.0
+    assert not jobs[2].duration_known
+    assert jobs[2].runtime == 300.0 == jobs[2].est_runtime
+    assert not jobs[3].duration_known
+    assert jobs[3].runtime == 3600.0             # documented default
+    # clones (scenario replay path) preserve the flag
+    assert not jobs[2].clone_pending().duration_known
+
+
+def test_csv_no_runtime_column_at_all(tmp_path):
+    p = tmp_path / "nort.csv"
+    with open(p, "w") as f:
+        f.write("job_id,submit_time,est_runtime,num_gpus\n")
+        f.write("7,5.0,120.0,2\n")
+    (j,) = load_trace_csv(str(p))
+    assert not j.duration_known
+    assert j.runtime == 120.0
